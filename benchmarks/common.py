@@ -1,0 +1,72 @@
+"""Shared benchmark scaffolding: the paper's §V-A experimental setup."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import CIFAR_CNN, CIFAR_MLP, MNIST_CNN, MNIST_MLP
+from repro.core import (FLSimulation, SimConfig, convergence_time,
+                        paper_constellation)
+from repro.data import (class_conditional_images, iid_partition,
+                        paper_noniid_partition)
+from repro.fl import Evaluator, ImageClassifierPool, get_strategy
+from repro.models import cnn
+
+SEPARATION = 0.8       # calibrated so the task saturates ~95-100% centrally
+TRAIN_N = 4000
+TEST_N = 1000
+LOCAL_ITERS = 30
+
+
+def small_cfg(dataset: str, kind: str):
+    base = {("mnist", "cnn"): MNIST_CNN, ("mnist", "mlp"): MNIST_MLP,
+            ("cifar", "cnn"): CIFAR_CNN, ("cifar", "mlp"): CIFAR_MLP}[(dataset, kind)]
+    if kind == "cnn":
+        return dataclasses.replace(base, conv_channels=(8, 16))
+    return base
+
+
+def make_setup(dataset: str = "mnist", model: str = "cnn",
+               iid: bool = False, seed: int = 0):
+    cfg = small_cfg(dataset, model)
+    size = cfg.image_size
+    ch = cfg.channels
+    const = paper_constellation()
+    imgs, labs = class_conditional_images(seed, TRAIN_N, size=size,
+                                          channels=ch, separation=SEPARATION)
+    ti, tl = class_conditional_images(seed + 99, TEST_N, size=size,
+                                      channels=ch, separation=SEPARATION)
+    if iid:
+        shards = iid_partition(labs, const.num_sats, seed)
+    else:
+        shards = paper_noniid_partition(labs, const.orbit_ids(), seed)
+    pool = ImageClassifierPool(cfg, imgs, labs, shards, local_iters=LOCAL_ITERS)
+    ev = Evaluator(cfg, ti, tl)
+    w0 = jax.device_get(cnn.init_params(jax.random.PRNGKey(seed), cfg))
+    return pool, ev, w0
+
+
+def run_strategy(name: str, pool, ev, w0, *, max_epochs: int = 16,
+                 duration_s: float = 3 * 86400.0,
+                 target_accuracy: Optional[float] = None,
+                 use_agg_kernel: bool = False):
+    spec = get_strategy(name)
+    if use_agg_kernel:
+        spec = dataclasses.replace(spec, use_agg_kernel=True)
+    sim = FLSimulation(spec, pool, ev, SimConfig(duration_s=duration_s))
+    t0 = time.time()
+    hist = sim.run(w0, max_epochs=max_epochs, target_accuracy=target_accuracy)
+    wall = time.time() - t0
+    best = max(r.accuracy for r in hist) if hist else 0.0
+    return {"strategy": name, "history": hist, "best_acc": best,
+            "final_time_h": hist[-1].time_s / 3600 if hist else float("inf"),
+            "wall_s": wall}
+
+
+def fmt_hist(res: Dict) -> List[str]:
+    return [f"{res['strategy']},{r.epoch},{r.time_s/3600:.3f},{r.accuracy:.4f},"
+            f"{r.num_models},{r.gamma:.3f}" for r in res["history"]]

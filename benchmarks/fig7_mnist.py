@@ -1,0 +1,52 @@
+"""Fig. 7: AsyncFLEO on MNIST-like data across settings —
+IID/non-IID x CNN/MLP x GS/HAP/two-HAP.  Emits accuracy-vs-time curves."""
+from __future__ import annotations
+
+from benchmarks.common import make_setup, run_strategy
+from repro.benchmarks_io import emit
+
+FULL_SETTINGS = [(iid, model, scen)
+                 for iid in (True, False)
+                 for model in ("cnn", "mlp")
+                 for scen in ("asyncfleo-gs", "asyncfleo-hap",
+                              "asyncfleo-twohap")]
+
+QUICK_SETTINGS = [
+    (True, "cnn", "asyncfleo-hap"),
+    (False, "cnn", "asyncfleo-hap"),
+    (False, "mlp", "asyncfleo-hap"),
+]
+
+
+def run(dataset: str = "mnist", quick: bool = True, max_epochs: int = 12):
+    settings = QUICK_SETTINGS if quick else FULL_SETTINGS
+    rows, curves = [], []
+    cache = {}
+    for iid, model, scen in settings:
+        key = (iid, model)
+        if key not in cache:
+            cache[key] = make_setup(dataset, model, iid=iid)
+        pool, ev, w0 = cache[key]
+        res = run_strategy(scen, pool, ev, w0, max_epochs=max_epochs)
+        rows.append({"iid": iid, "model": model, "scheme": scen,
+                     "best_acc": round(res["best_acc"], 4),
+                     "final_time_h": round(res["final_time_h"], 2)})
+        for r in res["history"]:
+            curves.append((f"{'iid' if iid else 'noniid'}-{model}-{scen}",
+                           r.epoch, round(r.time_s / 3600, 3),
+                           round(r.accuracy, 4)))
+    return {"rows": rows, "curves": curves, "dataset": dataset}
+
+
+def main(dataset="mnist", quick=True):
+    out = run(dataset, quick=quick)
+    print("iid,model,scheme,best_acc,final_time_h")
+    for r in out["rows"]:
+        print(f"{r['iid']},{r['model']},{r['scheme']},{r['best_acc']},"
+              f"{r['final_time_h']}")
+    emit(f"fig7_{dataset}" if dataset == "mnist" else f"fig8_{dataset}", out)
+    return out
+
+
+if __name__ == "__main__":
+    main(quick=False)

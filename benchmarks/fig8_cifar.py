@@ -1,0 +1,14 @@
+"""Fig. 8: the Fig. 7 settings sweep on CIFAR-10-like data (32x32x3)."""
+from benchmarks import fig7_mnist
+
+
+def run(quick: bool = True, max_epochs: int = 12):
+    return fig7_mnist.run("cifar", quick=quick, max_epochs=max_epochs)
+
+
+def main(quick=True):
+    return fig7_mnist.main(dataset="cifar", quick=quick)
+
+
+if __name__ == "__main__":
+    main(quick=False)

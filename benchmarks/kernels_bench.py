@@ -1,0 +1,89 @@
+"""Kernel microbenchmarks: us_per_call for each Pallas kernel (interpret mode
+on CPU — relative numbers + oracle comparisons; real perf comes from the
+roofline analysis, not CPU wall time) and the XLA reference path."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chunk_scan.ops import chunk_scan
+from repro.kernels.fed_agg.ops import fed_agg
+from repro.kernels.fed_agg.ref import fed_agg_flat_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.pairwise_dist.ops import pairwise_dist
+from repro.kernels.pairwise_dist.ref import pairwise_dist_sq_ref
+from repro.models.scan_ops import chunked_scan
+
+
+def _time(fn, *args, iters: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # fed_agg: 40-satellite CNN-scale aggregation
+    C, N = 40, 200_000
+    stack = jax.random.normal(key, (C, N))
+    gamma = jnp.full((C,), 1.0 / C)
+    base = jax.random.normal(key, (N,))
+    rows.append(("fed_agg_pallas_interp", _time(
+        lambda: fed_agg(stack, gamma, base, 0.2)), f"C={C},N={N}"))
+    ref = jax.jit(fed_agg_flat_ref)
+    rows.append(("fed_agg_xla_ref", _time(
+        lambda: ref(stack, gamma, base, 0.2)), f"C={C},N={N}"))
+
+    # pairwise_dist: 5 orbit models
+    x = jax.random.normal(key, (5, 200_000))
+    rows.append(("pairwise_dist_pallas_interp", _time(
+        lambda: pairwise_dist(x, squared=True)), "M=5,N=200k"))
+    refp = jax.jit(pairwise_dist_sq_ref)
+    rows.append(("pairwise_dist_xla_ref", _time(lambda: refp(x)), "M=5,N=200k"))
+
+    # chunk_scan vs jnp chunked path (mamba-style)
+    B, T, H, K, V = 1, 512, 4, 16, 32
+    ks = jax.random.split(key, 4)
+    r = jax.random.normal(ks[0], (B, T, H, K)) * 0.3
+    k = jax.random.normal(ks[1], (B, T, H, K)) * 0.3
+    v = jax.random.normal(ks[2], (B, T, H, V)) * 0.3
+    ld = -jax.random.uniform(ks[3], (B, T, H)) * 0.5
+    rows.append(("chunk_scan_pallas_interp", _time(
+        lambda: chunk_scan(r, k, v, ld, chunk=64)), f"T={T},H={H}"))
+    jn = jax.jit(lambda *a: chunked_scan(*a, include_current=True, chunk=64))
+    rows.append(("chunk_scan_xla_chunked", _time(
+        lambda: jn(r, k, v, ld)), f"T={T},H={H}"))
+
+    # flash attention
+    q = jax.random.normal(ks[0], (1, 512, 4, 64)) * 0.5
+    kk = jax.random.normal(ks[1], (1, 512, 2, 64)) * 0.5
+    vv = jax.random.normal(ks[2], (1, 512, 2, 64)) * 0.5
+    rows.append(("flash_attn_pallas_interp", _time(
+        lambda: flash_attention(q, kk, vv)), "S=512,H=4,GQA2"))
+
+    def xla_ref():
+        k2, v2 = jnp.repeat(kk, 2, 2), jnp.repeat(vv, 2, 2)
+        fl = lambda t: t.transpose(0, 2, 1, 3).reshape(4, 512, 64)
+        return attention_ref(fl(q), fl(k2), fl(v2))
+    xr = jax.jit(xla_ref)
+    rows.append(("flash_attn_xla_ref", _time(xr), "S=512,H=4"))
+    return rows
+
+
+def main():
+    print("name,us_per_call,config")
+    for name, us, cfgs in run():
+        print(f"{name},{us:.0f},{cfgs}")
+
+
+if __name__ == "__main__":
+    main()

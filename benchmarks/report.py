@@ -1,0 +1,152 @@
+"""Render EXPERIMENTS.md sections (markdown tables) from benchmark artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report            # prints to stdout
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import load_and_analyze, roofline_terms
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def _fmt(x, nd=4):
+    if x is None:
+        return "—"
+    if isinstance(x, float):
+        if x == 0:
+            return "0"
+        if abs(x) < 1e-4 or abs(x) >= 1e6:
+            return f"{x:.2e}"
+        return f"{x:.{nd}f}"
+    return str(x)
+
+
+def roofline_table(path: str) -> str:
+    rows = load_and_analyze([path])
+    out = ["| arch | shape | chips | compute (s) | memory (s) | collective (s) "
+           "| dominant | MODEL_FLOPs/HLO ratio | bound (s/step) |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"skip | — | {r['reason'][:60]} |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['chips']} | "
+            f"{_fmt(r['compute_s'])} | {_fmt(r['memory_s'])} | "
+            f"{_fmt(r['collective_s'])} | **{r['dominant']}** | "
+            f"{_fmt(r['useful_ratio'], 3)} | {_fmt(r['step_time_bound_s'])} |")
+    return "\n".join(out)
+
+
+def dryrun_table(path: str) -> str:
+    with open(path) as f:
+        data = json.load(f)
+    out = ["| arch | shape | compile (s) | HLO flops | collective bytes | "
+           "arg bytes/dev (GB) | temp bytes/dev (GB) |",
+           "|---|---|---|---|---|---|---|"]
+    for e in data:
+        if e.get("skipped"):
+            out.append(f"| {e['arch']} | {e['shape']} | — | — | — | skip | skip |")
+            continue
+        if "error" in e:
+            out.append(f"| {e['arch']} | {e['shape']} | FAIL | — | — | — | — |")
+            continue
+        mem = e.get("memory", {})
+        arg = (mem.get("argument_size_bytes") or 0) / e["num_devices"] / 2**30
+        tmp = (mem.get("temp_size_bytes") or 0) / e["num_devices"] / 2**30
+        out.append(
+            f"| {e['arch']} | {e['shape']} | {e['compile_s']} | "
+            f"{e['flops']:.3e} | {e['collective_bytes']['total']:.3e} | "
+            f"{arg:.2f} | {tmp:.2f} |")
+    return "\n".join(out)
+
+
+def hillclimb_row(path: str, label: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    e = data[0] if isinstance(data, list) else data
+    r = roofline_terms(e)
+    mem = e.get("memory", {})
+    r["label"] = label
+    r["temp_gb_dev"] = (mem.get("temp_size_bytes") or 0) / e["num_devices"] / 2**30
+    r["arg_gb_dev"] = (mem.get("argument_size_bytes") or 0) / e["num_devices"] / 2**30
+    return r
+
+
+def hillclimb_table(entries) -> str:
+    out = ["| iteration | compute (s) | memory (s) | collective (s) | "
+           "collective bytes | temp GB/dev | arg GB/dev | Δ dominant |",
+           "|---|---|---|---|---|---|---|---|"]
+    prev = None
+    for label, path in entries:
+        try:
+            r = hillclimb_row(path, label)
+        except FileNotFoundError:
+            continue
+        dom = r["dominant"] + "_s"
+        delta = ""
+        if prev is not None and prev.get(dom):
+            delta = f"{(r[dom] - prev[dom]) / prev[dom] * 100:+.1f}%"
+        out.append(
+            f"| {label} | {_fmt(r['compute_s'])} | {_fmt(r['memory_s'])} | "
+            f"{_fmt(r['collective_s'])} | {r['collective_bytes']:.3e} | "
+            f"{r['temp_gb_dev']:.2f} | {r['arg_gb_dev']:.2f} | {delta} |")
+        prev = r
+    return "\n".join(out)
+
+
+def main():
+    sp = os.path.join(ART, "dryrun_base_singlepod.json")
+    mp = os.path.join(ART, "dryrun_base_multipod.json")
+    if os.path.exists(sp):
+        print("## Roofline — single pod (16x16 = 256 chips), baseline rules\n")
+        print(roofline_table(sp))
+    if os.path.exists(mp):
+        print("\n## Roofline — multi-pod (2x16x16 = 512 chips), baseline rules\n")
+        print(roofline_table(mp))
+    if os.path.exists(sp):
+        print("\n## Dry-run artifacts (single pod)\n")
+        print(dryrun_table(sp))
+
+    for name, base_shape, entries in [
+        ("HC1: deepseek-v2-236b prefill_32k", ("deepseek-v2-236b", "prefill_32k"), [
+            ("it1 q_chunks=8", os.path.join(ART, "hc1_it1_qchunks8.json")),
+            ("it2 +capacity_factor=1.0", os.path.join(ART, "hc1_it2_cf1.json")),
+            ("it3 q_chunks=16", os.path.join(ART, "hc1_it3_qchunks16.json")),
+        ]),
+        ("HC2: kimi-k2-1t-a32b train_4k", ("kimi-k2-1t-a32b", "train_4k"), [
+            ("it1 fsdp rules", os.path.join(ART, "hc2_it1_fsdp.json")),
+            ("it2 +donate", os.path.join(ART, "hc2_it2_donate.json")),
+            ("it3 +q_chunks=4", os.path.join(ART, "hc2_it3_qchunks.json")),
+            ("it4 +no-remat", os.path.join(ART, "hc2_it4_noremat.json")),
+        ]),
+        ("HC3: qwen3-4b train_4k", ("qwen3-4b", "train_4k"), [
+            ("it1 no-remat", os.path.join(ART, "hc3_it1_noremat.json")),
+            ("it2 +q_chunks=4", os.path.join(ART, "hc3_it2_qchunks.json")),
+            ("it3 +fsdp+donate", os.path.join(ART, "hc3_it3_fsdp.json")),
+        ]),
+    ]:
+        if not any(os.path.exists(p) for _, p in entries):
+            continue
+        print(f"\n## {name}\n")
+        # baseline row from the campaign artifact
+        base_entries = [("baseline", None)]
+        with open(sp) as f:
+            for e in json.load(f):
+                if (e.get("arch"), e.get("shape")) == base_shape:
+                    import tempfile
+                    tf = tempfile.NamedTemporaryFile("w", suffix=".json",
+                                                     delete=False)
+                    json.dump(e, tf)
+                    tf.close()
+                    base_entries = [("baseline (paper-faithful)", tf.name)]
+        print(hillclimb_table(base_entries + entries))
+
+
+if __name__ == "__main__":
+    main()

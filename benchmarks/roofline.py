@@ -1,0 +1,229 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh), in seconds-per-step:
+
+    compute    = FLOPs          / (chips * 197e12)        [bf16 MXU peak]
+    memory     = HBM bytes      / (chips * 819e9)
+    collective = collective B   / (chips * 4 * 50e9)      [v5e: 4 ICI links]
+
+FLOP/byte accounting: XLA's ``cost_analysis()`` counts a ``scan`` body ONCE
+regardless of trip count (verified empirically — see EXPERIMENTS.md §Dry-run),
+so for scan-over-layers models we use an analytic estimator for total
+compute/memory (standard 6ND-style accounting, matmul-dominated and exact to
+first order) and report the HLO numbers alongside.  Collective bytes come
+from the compiled HLO (outside the scan body collectives appear per-step;
+in-scan collectives are scaled by trip count analytically where flagged).
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) and the ratio
+MODEL_FLOPS / total_flops shows how much compiled compute is "useful".
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, Optional
+
+from repro.configs import ARCHS, SHAPES, LONG_CONTEXT_WINDOW, get_config, get_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, ICI_LINKS,
+                               PEAK_FLOPS_BF16)
+from repro.launch.steps import cache_len_for, window_for
+
+
+# --------------------------------------------------------------------------
+# analytic FLOPs / bytes (documented estimator; scan-body undercount fix)
+# --------------------------------------------------------------------------
+
+def _attention_flops_fwd(cfg: ModelConfig, B: int, S: int, kv_len: int) -> float:
+    """Score + AV matmul FLOPs, full (unmasked) as XLA computes them."""
+    if cfg.family == "ssm":
+        return 0.0
+    if cfg.family == "hybrid":
+        n_attn = cfg.num_layers // cfg.attn_every
+        hd = cfg.resolved_head_dim
+        return 4.0 * B * S * kv_len * cfg.num_heads * hd * n_attn
+    hd = (cfg.nope_head_dim + cfg.rope_head_dim) if cfg.use_mla \
+        else cfg.resolved_head_dim
+    return 4.0 * B * S * kv_len * cfg.num_heads * hd * cfg.num_layers
+
+
+def _ssm_flops_fwd(cfg: ModelConfig, B: int, S: int) -> float:
+    if cfg.family == "ssm":
+        H = cfg.ssm_heads
+        hd = cfg.ssm_head_dim or cfg.d_model // H
+        K = V = hd
+        nl = cfg.num_layers
+    elif cfg.family == "hybrid":
+        H = cfg.ssm_heads
+        hd = cfg.ssm_head_dim or cfg.d_model // H
+        K, V = cfg.ssm_state, hd
+        nl = cfg.num_layers
+    else:
+        return 0.0
+    # chunked scan: intra (2*S*Lc*K + 2*S*Lc*V) + carry (4*S*K*V) per head
+    Lc = cfg.chunk_size
+    per_tok = 2.0 * Lc * K + 2.0 * Lc * V + 4.0 * K * V
+    return B * S * H * per_tok * nl
+
+
+def _moe_capacity_extra(cfg: ModelConfig, T: float, capacity_factor: float) -> float:
+    """Routed-expert matmuls run at capacity C = T*k*cf/E per expert, so
+    their FLOPs scale by cf relative to the exact-top-k accounting baked
+    into N_active (cf=1).  Extra (or saved) FLOPs = 2*T*(cf-1)*routed."""
+    if not cfg.is_moe:
+        return 0.0
+    f = cfg.moe_d_ff or cfg.d_ff
+    n_moe = cfg.num_layers - cfg.first_dense_layers
+    routed = 3.0 * cfg.d_model * f * cfg.top_k * n_moe
+    return 2.0 * T * (capacity_factor - 1.0) * routed
+
+
+def analytic_flops(cfg: ModelConfig, shape: ShapeConfig, *, q_chunks: int = 1,
+                   capacity_factor: float = None, remat: bool = None) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    N_act = cfg.active_param_count()
+    window = window_for(cfg, shape)
+    cf = capacity_factor if capacity_factor is not None else cfg.moe_capacity_factor
+    use_remat = cfg.remat if remat is None else remat
+    # chunked causal prefill: query chunk i attends to keys [0,(i+1)S/n)
+    attn_scale = (q_chunks + 1) / (2.0 * q_chunks) if q_chunks > 1 else 1.0
+    if shape.kind == "train":
+        T = B * S
+        fwd = (2.0 * N_act * T
+               + attn_scale * _attention_flops_fwd(cfg, B, S, min(S, window or S))
+               + _ssm_flops_fwd(cfg, B, S)
+               + _moe_capacity_extra(cfg, T, cf))
+        total = 3.0 * fwd                # fwd + 2x bwd
+        if use_remat:
+            total += fwd                 # full remat recomputes the forward
+        return total
+    if shape.kind == "prefill":
+        T = B * S
+        return (2.0 * N_act * T
+                + attn_scale * _attention_flops_fwd(cfg, B, S, min(S, window or S))
+                + _ssm_flops_fwd(cfg, B, S)
+                + _moe_capacity_extra(cfg, T, cf))
+    # decode: one token per sequence; attention over the cache
+    kv_len = cache_len_for(cfg, shape)
+    return (2.0 * N_act * B
+            + _attention_flops_fwd(cfg, B, 1, kv_len)
+            + _ssm_flops_fwd(cfg, B, 1)
+            + _moe_capacity_extra(cfg, B, cf))
+
+
+def analytic_hbm_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """HBM traffic per step (global, all chips): parameters + optimizer
+    state + activations + decode cache, to first order."""
+    B, S = shape.global_batch, shape.seq_len
+    N = cfg.param_count()
+    N_act = cfg.active_param_count()
+    d = cfg.d_model
+    act_bytes_per_tok = 2.0 * d * cfg.num_layers * 2     # resid+hidden, bf16
+    if shape.kind == "train":
+        # params read f32 (master) + grads write/read + adam m,v read/write
+        param_traffic = N * (4 + 4 + 4 + 4 * 4)
+        act = B * S * act_bytes_per_tok * (2 if cfg.remat else 1)
+        return param_traffic + act
+    if shape.kind == "prefill":
+        return N * 2 + B * S * act_bytes_per_tok
+    # decode: active params + full cache read + one-token activations
+    cl = cache_len_for(cfg, shape)
+    if cfg.use_mla:
+        cache = B * cl * (cfg.kv_lora_rank + cfg.rope_head_dim) * 2 * cfg.num_layers
+    elif cfg.family == "ssm":
+        H = cfg.ssm_heads
+        hd = cfg.ssm_head_dim or d // H
+        cache = B * H * hd * hd * 4 * cfg.num_layers
+    elif cfg.family == "hybrid":
+        H = cfg.ssm_heads
+        hd = cfg.ssm_head_dim or d // H
+        n_attn = cfg.num_layers // cfg.attn_every
+        cache = (B * H * cfg.ssm_state * hd * 4 * cfg.num_layers
+                 + B * cl * cfg.num_kv_heads * cfg.resolved_head_dim * 2 * 2 * n_attn)
+    else:
+        cache = B * cl * cfg.num_kv_heads * cfg.resolved_head_dim * 2 * 2 * cfg.num_layers
+    return N_act * 2 + cache + B * act_bytes_per_tok
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """The headline 6ND (dense) / 6·N_active·D (MoE) number."""
+    B, S = shape.global_batch, shape.seq_len
+    T = B * S if shape.kind != "decode" else B
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * cfg.active_param_count() * T
+
+
+# --------------------------------------------------------------------------
+# terms
+# --------------------------------------------------------------------------
+
+def roofline_terms(entry: Dict) -> Dict:
+    """entry: one dry-run JSON record -> roofline report row."""
+    cfg = get_config(entry["arch"])
+    shape = get_shape(entry["shape"])
+    chips = entry["num_devices"]
+    fl = analytic_flops(cfg, shape,
+                        q_chunks=entry.get("q_chunks", 1),
+                        capacity_factor=entry.get("capacity_factor"),
+                        remat=entry.get("remat"))
+    hbm = analytic_hbm_bytes(cfg, shape)
+    coll = float(entry.get("collective_bytes", {}).get("total", 0.0))
+
+    t_compute = fl / (chips * PEAK_FLOPS_BF16)
+    t_memory = hbm / (chips * HBM_BW)
+    t_coll = coll / (chips * ICI_LINKS * ICI_BW_PER_LINK)
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    return {
+        "arch": entry["arch"], "shape": entry["shape"],
+        "mesh": "x".join(map(str, entry["mesh_shape"])),
+        "rules": entry.get("rules", "base"),
+        "chips": chips,
+        "analytic_flops": fl, "analytic_hbm_bytes": hbm,
+        "collective_bytes": coll,
+        "hlo_flops": entry.get("flops", -1),
+        "hlo_bytes": entry.get("bytes_accessed", -1),
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "useful_ratio": round(mf / fl, 4) if fl else 0.0,
+        "step_time_bound_s": round(max(terms.values()), 6),
+    }
+
+
+def load_and_analyze(paths) -> list:
+    rows = []
+    for p in paths:
+        with open(p) as f:
+            data = json.load(f)
+        for entry in (data if isinstance(data, list) else [data]):
+            if entry.get("skipped") or "error" in entry:
+                rows.append({"arch": entry.get("arch"), "shape": entry.get("shape"),
+                             "skipped": True,
+                             "reason": entry.get("reason", entry.get("error", ""))})
+                continue
+            rows.append(roofline_terms(entry))
+    return rows
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args(argv)
+    rows = load_and_analyze(args.paths)
+    cols = ["arch", "shape", "mesh", "rules", "compute_s", "memory_s",
+            "collective_s", "dominant", "useful_ratio"]
+    print(",".join(cols))
+    for r in rows:
+        if r.get("skipped"):
+            print(f"{r['arch']},{r['shape']},skipped: {r['reason']}")
+            continue
+        print(",".join(str(r.get(c, "")) for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV blocks per benchmark.  Quick mode
+(default) runs reduced epoch counts so the whole suite finishes on a CPU
+container; --full reproduces the complete sweeps (see EXPERIMENTS.md for
+archived full results).  The roofline block reads any dry-run artifacts in
+benchmarks/artifacts/dryrun*.json.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import sys
+import time
+
+
+def _banner(name):
+    print(f"\n### {name}")
+
+
+def main() -> None:
+    full = "--full" in sys.argv or os.environ.get("BENCH_FULL") == "1"
+
+    t0 = time.time()
+    _banner("kernels (paper has no kernel table; supports §Perf)")
+    from benchmarks import kernels_bench
+    kernels_bench.main()
+
+    _banner("table2_fig6: SOTA comparison, non-IID MNIST-like + CNN")
+    from benchmarks import table2
+    out = table2.run(max_epochs=16 if full else 12,
+                     schemes=None if full else
+                     ["fedisl-ideal", "fedhap",
+                      "asyncfleo-hap", "asyncfleo-twohap"])
+    print("scheme,best_acc,conv_time_h,epochs")
+    for r in out["rows"]:
+        print(f"{r['scheme']},{r['best_acc']},{r['conv_time_h']},{r['epochs']}")
+    print(f"speedup_vs_slowest_sync,{out['speedup_vs_slowest_sync']}")
+    from repro.benchmarks_io import emit
+    emit("table2_quick" if not full else "table2", out)
+
+    _banner("fig7: MNIST settings sweep (IID/non-IID x CNN/MLP x PS)")
+    from benchmarks import fig7_mnist
+    out7 = fig7_mnist.run("mnist", quick=not full,
+                          max_epochs=12 if full else 12)
+    print("iid,model,scheme,best_acc,final_time_h")
+    for r in out7["rows"]:
+        print(f"{r['iid']},{r['model']},{r['scheme']},{r['best_acc']},{r['final_time_h']}")
+    emit("fig7_mnist", out7)
+
+    _banner("fig8: CIFAR-like settings sweep")
+    from benchmarks import fig8_cifar
+    out8 = fig8_cifar.run(quick=not full, max_epochs=12 if full else 12)
+    print("iid,model,scheme,best_acc,final_time_h")
+    for r in out8["rows"]:
+        print(f"{r['iid']},{r['model']},{r['scheme']},{r['best_acc']},{r['final_time_h']}")
+    emit("fig8_cifar", out8)
+
+    _banner("ablations (beyond-paper): AsyncFLEO component contributions")
+    from benchmarks import ablations
+    outa = ablations.run(max_epochs=12)
+    print("variant,best_acc,final_time_h,epochs,mean_gamma")
+    for r in outa["rows"]:
+        print(f"{r['variant']},{r['best_acc']},{r['final_time_h']},"
+              f"{r['epochs']},{r['mean_gamma']}")
+    emit("ablations", outa)
+
+    _banner("roofline: dry-run artifacts")
+    from benchmarks import roofline
+    arts = sorted(glob.glob(os.path.join(
+        os.path.dirname(__file__), "artifacts", "dryrun*.json")))
+    if arts:
+        roofline.main(arts)
+    else:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --arch all --shape all "
+              "--out benchmarks/artifacts/dryrun_base.json` first")
+
+    print(f"\n# total bench wall: {time.time()-t0:.0f}s (full={full})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: AsyncFLEO end-to-end in ~2 minutes on CPU.
+
+Builds the paper's constellation (40 LEO satellites, 5 orbits, 2000 km),
+partitions a synthetic MNIST-like dataset non-IID across orbits (paper
+§V-A), and runs the AsyncFLEO asynchronous FL loop with a single HAP as
+parameter server, printing simulated-time accuracy as it converges.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+import sys
+
+import jax
+
+sys.path.insert(0, "src")
+
+from repro.configs import MNIST_CNN
+from repro.core import FLSimulation, SimConfig, paper_constellation
+from repro.data import class_conditional_images, paper_noniid_partition
+from repro.fl import Evaluator, ImageClassifierPool, get_strategy
+from repro.models import cnn
+
+
+def main():
+    cfg = dataclasses.replace(MNIST_CNN, conv_channels=(8, 16))
+    const = paper_constellation()
+    print(f"constellation: {const.num_orbits} orbits x {const.sats_per_orbit} "
+          f"satellites @ {const.altitude_m/1e3:.0f} km, period "
+          f"{const.period_s/60:.1f} min")
+
+    imgs, labs = class_conditional_images(0, 3000, separation=0.8)
+    test_i, test_l = class_conditional_images(99, 800, separation=0.8)
+    shards = paper_noniid_partition(labs, const.orbit_ids(), seed=0)
+    pool = ImageClassifierPool(cfg, imgs, labs, shards, local_iters=20)
+    ev = Evaluator(cfg, test_i, test_l)
+    w0 = jax.device_get(cnn.init_params(jax.random.PRNGKey(0), cfg))
+
+    sim = FLSimulation(get_strategy("asyncfleo-hap"), pool, ev,
+                       SimConfig(duration_s=86400.0))
+    print("running AsyncFLEO-HAP (async, ring-of-stars, grouping, "
+          "staleness discounting)...")
+    hist = sim.run(w0, max_epochs=8, target_accuracy=0.9)
+    for r in hist:
+        print(f"  epoch {r.epoch:2d}  sim-time {r.time_s/3600:5.2f} h  "
+              f"accuracy {r.accuracy:.3f}  models {r.num_models:2d}  "
+              f"gamma {r.gamma:.2f}")
+    print(f"final accuracy {hist[-1].accuracy:.3f} after "
+          f"{hist[-1].time_s/3600:.2f} simulated hours")
+
+
+if __name__ == "__main__":
+    main()

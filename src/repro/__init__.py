@@ -1,0 +1,7 @@
+"""repro — AsyncFLEO (asynchronous federated learning for LEO constellations
+with HAPs) as a production-grade JAX framework.
+
+Subpackages: core (the paper's contribution), fl (runtime), models, data,
+optim, checkpoint, kernels (Pallas), configs, launch.
+"""
+__version__ = "1.0.0"

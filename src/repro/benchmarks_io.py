@@ -1,0 +1,37 @@
+"""Benchmark artifact IO: JSON results under benchmarks/artifacts/."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+ARTIFACT_DIR = os.environ.get(
+    "REPRO_ARTIFACTS",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__)))), "benchmarks", "artifacts"))
+
+
+def _default(o):
+    if dataclasses.is_dataclass(o):
+        return dataclasses.asdict(o)
+    if hasattr(o, "tolist"):
+        return o.tolist()
+    if hasattr(o, "item"):
+        return o.item()
+    return str(o)
+
+
+def emit(name: str, payload) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.join(ARTIFACT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump({"name": name, "ts": time.time(), "data": payload},
+                  f, indent=1, default=_default)
+    return path
+
+
+def load(name: str):
+    path = os.path.join(ARTIFACT_DIR, f"{name}.json")
+    with open(path) as f:
+        return json.load(f)["data"]

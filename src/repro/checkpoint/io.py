@@ -1,0 +1,61 @@
+"""Pytree checkpointing (npz + json treedef — no orbax in this container).
+
+Flat-key layout: each leaf saved under its '/'-joined key path; the treedef
+is reconstructed from the key paths, so arbitrary nested dict/list pytrees of
+arrays round-trip.  FL server state (global model + metadata + grouping)
+uses the same primitive.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return root
+
+
+def save_pytree(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez_compressed(path, **_flatten_with_paths(tree))
+
+
+def load_pytree(path: str):
+    with np.load(path, allow_pickle=False) as z:
+        return _unflatten({k: z[k] for k in z.files})
+
+
+def save_server_state(path: str, *, global_model, epoch: int,
+                      grouping=None, metadata=None) -> None:
+    save_pytree(path, {"global_model": global_model})
+    side = {"epoch": int(epoch),
+            "grouping": grouping if grouping is not None else [],
+            "metadata": metadata if metadata is not None else {}}
+    with open(path + ".json", "w") as f:
+        json.dump(side, f)
+
+
+def load_server_state(path: str):
+    tree = load_pytree(path)
+    with open(path + ".json") as f:
+        side = json.load(f)
+    return tree["global_model"], side

@@ -1,0 +1,17 @@
+# The paper's primary contribution: AsyncFLEO's topology, propagation,
+# grouping, staleness-discounted aggregation, and the discrete-event
+# simulation that turns orbital mechanics into FL convergence times.
+from repro.core.constellation import (
+    WalkerDelta, GroundNode, paper_constellation, make_ps_nodes,
+    R_EARTH, C_LIGHT,
+)
+from repro.core.visibility import VisibilityTimeline, elevation_deg, sat_los
+from repro.core.links import LinkModel, model_bits
+from repro.core.topology import RingOfStars
+from repro.core.propagation import PropagationModel
+from repro.core.grouping import GroupingState, group_by_gaps, model_distance
+from repro.core.aggregation import (
+    SatelliteMeta, fedavg, asyncfleo_aggregate, staleness_gamma, weighted_sum,
+    dedup,
+)
+from repro.core.simulator import FLSimulation, SimConfig, EpochRecord, convergence_time

@@ -1,0 +1,132 @@
+"""Model aggregation (paper §IV-C2, Algorithm 2, eqs. 13-14) + FedAvg (eq. 4).
+
+Selection: per group, keep *fresh* models (metadata.epoch == current beta) and
+discard stale ones — unless a group has only stale models, in which case its
+models participate with the staleness discount gamma (eq. 13):
+
+    gamma = sum_n (D_n / D) * (k_n / beta)
+
+Update (eq. 14):  w^{beta+1} = (1 - gamma) w^beta + sum_n p_n w_n, with
+per-model weights p_n ∝ D_n * (k_n/beta) normalized to sum to gamma.  The
+literal eq. 14 multiplies every selected model by the scalar gamma, which is
+not convex for >1 model; ``strict_paper_eq14=True`` reproduces it anyway
+(DESIGN.md §3 records this interpretation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class SatelliteMeta:
+    """Metadata tuple <ID, size, loc, ts, epoch> (paper §IV-C1)."""
+    sat_id: int
+    size: float                   # training-data size D_n
+    loc: tuple                    # angular coordinates (for next-visit calc)
+    ts: float                     # timestamp of transmission
+    epoch: int                    # last global epoch this sat's model joined
+
+    def is_fresh(self, beta: int) -> bool:
+        return self.epoch >= beta
+
+
+def dedup(models: List, metas: List[SatelliteMeta]):
+    """Filter duplicates (a satellite visible to >1 HAP at once, §IV-C1):
+    keep the most recent timestamp per satellite id."""
+    best: Dict[int, int] = {}
+    for i, m in enumerate(metas):
+        j = best.get(m.sat_id)
+        if j is None or metas[j].ts < m.ts:
+            best[m.sat_id] = i
+    keep = sorted(best.values())
+    return [models[i] for i in keep], [metas[i] for i in keep]
+
+
+def weighted_sum(models: Sequence, weights: Sequence[float], base=None,
+                 base_weight: float = 0.0, *, use_kernel: bool = False):
+    """w = base_weight * base + sum_i weights_i * models_i  (pytree math).
+    ``use_kernel`` routes the reduction through the Pallas fed_agg kernel."""
+    if use_kernel:
+        from repro.kernels.fed_agg import ops as agg_ops
+        return agg_ops.fed_agg_pytree(models, np.asarray(weights, np.float32),
+                                      base, base_weight)
+    ws = [float(w) for w in weights]
+
+    def comb(*leaves):
+        acc = sum(w * np.asarray(l, dtype=np.float32) for w, l in zip(ws, leaves))
+        return acc
+    out = jax.tree.map(comb, *models)
+    if base is not None and base_weight != 0.0:
+        out = jax.tree.map(lambda b, o: base_weight * np.asarray(b, np.float32) + o,
+                           base, out)
+    elif base is not None:
+        pass
+    return out
+
+
+def fedavg(models: Sequence, sizes: Sequence[float], *, use_kernel=False):
+    """Synchronous FedAvg (eq. 4)."""
+    total = float(sum(sizes))
+    return weighted_sum(models, [s / total for s in sizes], use_kernel=use_kernel)
+
+
+def staleness_gamma(metas: Sequence[SatelliteMeta], total_data: float,
+                    beta: int) -> float:
+    """eq. (13) over the selected (stale) models."""
+    if beta <= 0:
+        return 1.0
+    g = sum((m.size / total_data) * (max(m.epoch, 0) / beta) for m in metas)
+    return float(np.clip(g, 0.0, 1.0))
+
+
+def asyncfleo_aggregate(w_prev, groups: Dict[int, List[int]], models: List,
+                        metas: List[SatelliteMeta], beta: int, *,
+                        strict_paper_eq14: bool = False,
+                        min_gamma: float = 0.1,
+                        use_kernel: bool = False):
+    """Algorithm 2 lines 12-17.
+
+    ``groups``: group id -> indices into models/metas.
+    Returns (w_new, info dict).
+    """
+    selected: List[int] = []
+    stale_only_groups = 0
+    for gi, idxs in groups.items():
+        fresh = [i for i in idxs if metas[i].is_fresh(beta)]
+        if fresh:
+            selected.extend(fresh)          # discard the group's stale models
+        else:
+            selected.extend(idxs)           # stale-only group joins, discounted
+            stale_only_groups += 1
+    if not selected:
+        return w_prev, {"gamma": 0.0, "selected": 0, "stale_groups": 0}
+
+    total_data = sum(metas[i].size for i in selected)
+    sel_metas = [metas[i] for i in selected]
+    sel_models = [models[i] for i in selected]
+
+    all_fresh = all(m.is_fresh(beta) for m in sel_metas)
+    if all_fresh:
+        gamma = 1.0                          # pure data-weighted FedAvg step
+        raw = np.array([m.size for m in sel_metas], np.float64)
+    else:
+        gamma = max(staleness_gamma(sel_metas, total_data, beta), min_gamma)
+        raw = np.array([m.size * (max(m.epoch, 0) / max(beta, 1) if not m.is_fresh(beta) else 1.0)
+                        for m in sel_metas], np.float64)
+        if raw.sum() <= 0.0:                 # all k_n == 0: size-weight instead
+            raw = np.array([m.size for m in sel_metas], np.float64)
+
+    if strict_paper_eq14:
+        weights = np.full(len(sel_models), gamma)
+    else:
+        weights = gamma * raw / raw.sum()
+
+    w_new = weighted_sum(sel_models, weights, base=w_prev,
+                         base_weight=1.0 - gamma, use_kernel=use_kernel)
+    info = {"gamma": gamma, "selected": len(selected),
+            "stale_groups": stale_only_groups}
+    return w_new, info

@@ -1,0 +1,108 @@
+"""Satellite grouping by model-weight divergence (paper §IV-C1, Fig. 5).
+
+The PS cannot see data (FL), so data-distribution similarity is inferred from
+model weights: per orbit, a *partial global model* S'_o = data-size-weighted
+average of that orbit's received local models; its Euclidean distance to the
+*initial* global model w0 (largest divergence happens in epoch 1, giving the
+sharpest differentiation) places the orbit on a 1-D axis; orbits with similar
+distances form a group.  Later epochs assign new orbits to the group whose
+members' mean distance is closest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+
+def flatten_model(model) -> np.ndarray:
+    return np.concatenate([np.asarray(l, dtype=np.float32).ravel()
+                           for l in jax.tree_util.tree_leaves(model)])
+
+
+def model_distance(model, ref_flat: np.ndarray) -> float:
+    """|| flat(model) - flat(w0) ||_2."""
+    return float(np.linalg.norm(flatten_model(model) - ref_flat))
+
+
+def partial_global_model(models: Sequence, sizes: Sequence[float]):
+    """Data-size-weighted average of one orbit's local models (Fig. 5a)."""
+    total = float(sum(sizes))
+    ws = [s / total for s in sizes]
+    return jax.tree.map(
+        lambda *leaves: sum(w * np.asarray(l, dtype=np.float32)
+                            for w, l in zip(ws, leaves)),
+        *models)
+
+
+def group_by_gaps(distances: Dict[int, float], num_groups: int = 3) -> List[List[int]]:
+    """1-D clustering: sort orbit distances, split at the (num_groups-1)
+    largest gaps.  Deterministic; matches the paper's 'similar Euclidean
+    distances are grouped together'."""
+    orbits = sorted(distances, key=lambda o: distances[o])
+    if len(orbits) <= num_groups:
+        return [[o] for o in orbits]
+    vals = np.array([distances[o] for o in orbits])
+    gaps = np.diff(vals)
+    cuts = np.sort(np.argsort(gaps)[::-1][: num_groups - 1])
+    groups, start = [], 0
+    for c in cuts:
+        groups.append(orbits[start:c + 1])
+        start = c + 1
+    groups.append(orbits[start:])
+    return groups
+
+
+@dataclasses.dataclass
+class GroupingState:
+    """Incremental grouping maintained by the sink HAP."""
+    ref_flat: Optional[np.ndarray] = None          # flat(w0)
+    distances: Dict[int, float] = dataclasses.field(default_factory=dict)
+    groups: List[List[int]] = dataclasses.field(default_factory=list)
+    num_groups: int = 3
+
+    def set_reference(self, w0) -> None:
+        self.ref_flat = flatten_model(w0)
+
+    def group_of(self, orbit: int) -> Optional[int]:
+        for gi, g in enumerate(self.groups):
+            if orbit in g:
+                return gi
+        return None
+
+    def observe_orbit(self, orbit: int, models: Sequence, sizes: Sequence[float]) -> int:
+        """Ingest an orbit's freshly received models; returns its group id.
+        First sighting computes the partial-model distance; known orbits keep
+        their stored group (paper: 'directly assigned to the associated
+        group')."""
+        gi = self.group_of(orbit)
+        if gi is not None:
+            return gi
+        assert self.ref_flat is not None, "set_reference(w0) first"
+        pm = partial_global_model(models, sizes)
+        d = model_distance(pm, self.ref_flat)
+        self.distances[orbit] = d
+        if len(self.groups) < self.num_groups:
+            # still building the grouping (paper: first epoch(s)) — recluster
+            # over every orbit distance seen so far so early arrivals don't
+            # freeze a degenerate single group.
+            self.groups = group_by_gaps(self.distances, self.num_groups)
+            return self.group_of(orbit)                     # type: ignore
+        # grouping established: assign to nearest group by mean distance
+        means = [np.mean([self.distances[o] for o in g if o in self.distances])
+                 if any(o in self.distances for o in g) else np.inf
+                 for g in self.groups]
+        gi = int(np.argmin([abs(d - m) for m in means]))
+        self.groups[gi].append(orbit)
+        return gi
+
+    def regroup(self) -> None:
+        """Re-run the gap clustering over all seen orbits (end of an epoch
+        where new orbits appeared)."""
+        if self.distances:
+            self.groups = group_by_gaps(self.distances, self.num_groups)
+
+    def all_grouped(self, num_orbits: int) -> bool:
+        return sum(len(g) for g in self.groups) >= num_orbits

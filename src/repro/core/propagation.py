@@ -1,0 +1,134 @@
+"""Model propagation timing (paper §IV-B, Algorithm 1).
+
+Downlink: the source HAP relays the global model around the HAP ring; every
+HAP broadcasts to its visible satellites; visible satellites relay along the
+intra-orbit ISL ring (two fronts, ceasing where they meet), so invisible
+satellites start training with minimal delay.  Orbits with *no* visible
+satellite wait for their next pass.
+
+Uplink: a trained local model goes straight up if its satellite sees a HAP,
+else it relays along the ring toward the nearest (eventually-)visible
+orbit-mate; received sets are relayed along the HAP ring to the sink.
+
+This module converts those rules into per-satellite receive/arrival *times*
+(simulated seconds), which is everything the discrete-event simulator needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.links import LinkModel
+from repro.core.topology import RingOfStars
+
+
+@dataclasses.dataclass
+class PropagationModel:
+    topo: RingOfStars
+    link: LinkModel
+
+    # ---- primitive hop delays ----------------------------------------------
+
+    def isl_hop_delay(self, bits: float) -> float:
+        return self.link.total_delay(bits, self.topo.isl_chord_m())
+
+    def ihl_hop_delay(self, bits: float, a: int, b: int, t: float) -> float:
+        return self.link.total_delay(bits, self.topo.ihl_distance(a, b, t))
+
+    def sat_ps_delay(self, bits: float, sat: int, ps: int, t: float) -> float:
+        return self.link.total_delay(bits, self.topo.sat_ps_distance(sat, ps, t))
+
+    # ---- downlink (Alg. 1 lines 2-10) ---------------------------------------
+
+    def hap_receive_times(self, t0: float, bits: float, source: int) -> np.ndarray:
+        """Time each HAP holds the global model after the ring relay."""
+        H = self.topo.num_ps
+        out = np.full(H, t0)
+        for h in range(H):
+            hops = self.topo.ring_hops(source, h)
+            delay = 0.0
+            for step in range(hops):     # accumulate per-hop IHL delays
+                delay += self.ihl_hop_delay(bits, source, h, t0)
+            out[h] = t0 + delay
+        return out
+
+    def downlink_times(self, t0: float, bits: float, source: int = 0) -> np.ndarray:
+        """Per-satellite time of receiving the global model (Alg. 1)."""
+        topo = self.topo
+        S = topo.constellation.num_sats
+        recv = np.full(S, np.inf)
+        hap_t = self.hap_receive_times(t0, bits, source)
+
+        # star broadcast from each HAP to its visible satellites
+        for h in range(topo.num_ps):
+            for sat in topo.star_members(h, hap_t[h]):
+                cand = hap_t[h] + self.sat_ps_delay(bits, sat, h, hap_t[h])
+                recv[sat] = min(recv[sat], cand)
+
+        # intra-orbit ISL relay from the seeded (visible) satellites
+        hop = self.isl_hop_delay(bits)
+        for orbit in range(topo.constellation.num_orbits):
+            sats = topo.orbit_sats(orbit)
+            seeds = [s for s in sats if np.isfinite(recv[s])]
+            if not seeds:
+                # no visible satellite now: wait for the orbit's next pass
+                t_vis, seed = topo.timeline.next_orbit_visible(sats, t0)
+                if t_vis is None:
+                    continue             # never visible within horizon
+                ps = topo.visible_ps_of(seed, t_vis)
+                ps0 = ps[0] if ps else 0
+                recv[seed] = (max(t_vis, hap_t[ps0])
+                              + self.sat_ps_delay(bits, seed, ps0, t_vis))
+                seeds = [seed]
+            for sat in sats:
+                best = recv[sat]
+                for seed in seeds:
+                    d = topo.isl_ring_distance(seed, sat)
+                    best = min(best, recv[seed] + d * hop)
+                recv[sat] = best
+        return recv
+
+    # ---- uplink (Alg. 1 lines 11-22) ----------------------------------------
+
+    def uplink(self, sat: int, t_done: float, bits: float,
+               sink: int) -> Tuple[float, int]:
+        """Arrival time of sat's local model at the *sink* HAP, and the HAP
+        that first received it."""
+        topo = self.topo
+        tl = topo.timeline
+        hop = self.isl_hop_delay(bits)
+
+        def to_sink(t_at_hap: float, h: int) -> float:
+            hops = topo.ring_hops(h, sink)
+            return t_at_hap + hops * self.ihl_hop_delay(bits, h, sink, t_at_hap)
+
+        # direct
+        vis = topo.visible_ps_of(sat, t_done)
+        if vis:
+            h = vis[0]
+            t_at = t_done + self.sat_ps_delay(bits, sat, h, t_done)
+            return to_sink(t_at, h), h
+
+        # relay toward a currently visible orbit-mate
+        sats = topo.orbit_sats(topo.constellation.orbit_of(sat))
+        now_vis = [s for s in sats if topo.visible_ps_of(s, t_done)]
+        if now_vis:
+            s_star = min(now_vis, key=lambda s: topo.isl_ring_distance(sat, s))
+            d = topo.isl_ring_distance(sat, s_star)
+            t_arrive = t_done + d * hop
+            h = topo.visible_ps_of(s_star, t_done)[0]
+            t_at = t_arrive + self.sat_ps_delay(bits, s_star, h, t_arrive)
+            return to_sink(t_at, h), h
+
+        # wait for the orbit's next visibility; the relay pre-positions
+        t_vis, s_star = tl.next_orbit_visible(sats, t_done)
+        if t_vis is None:
+            return np.inf, -1
+        d = topo.isl_ring_distance(sat, s_star)
+        t_ready = max(t_done + d * hop, t_vis)
+        vis2 = topo.visible_ps_of(s_star, t_vis)
+        h = vis2[0] if vis2 else 0
+        t_at = t_ready + self.sat_ps_delay(bits, s_star, h, t_ready)
+        return to_sink(t_at, h), h

@@ -1,0 +1,84 @@
+"""Ring-of-stars topology (paper §IV-A).
+
+HAP layer: the HAPs form a ring (each talks to its two neighbors via IHL);
+one is *source*, one *sink* (roles swap every global epoch).  Each HAP also
+runs a star with its currently visible satellites.  SAT layer: satellites of
+one orbit form an ISL ring (adjacent neighbors only — cross-orbit links are
+excluded because of Doppler, §IV-A).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.constellation import GroundNode, WalkerDelta
+from repro.core.visibility import VisibilityTimeline
+
+
+@dataclasses.dataclass
+class RingOfStars:
+    constellation: WalkerDelta
+    nodes: List[GroundNode]
+    timeline: VisibilityTimeline
+
+    # ---- HAP ring ----------------------------------------------------------
+
+    @property
+    def num_ps(self) -> int:
+        return len(self.nodes)
+
+    def ring_hops(self, src: int, dst: int) -> int:
+        """Hops along the HAP ring from src to dst (shorter direction —
+        the relay floods both ways)."""
+        H = self.num_ps
+        d = abs(dst - src)
+        return min(d, H - d)
+
+    def sink_of(self, source: int) -> int:
+        """Sink = HAP farthest from the source on the ring (§IV-B1)."""
+        H = self.num_ps
+        return (source + H // 2) % H if H > 1 else source
+
+    def ihl_distance(self, a: int, b: int, t: float) -> float:
+        return float(np.linalg.norm(self.nodes[a].position(t)
+                                    - self.nodes[b].position(t)))
+
+    # ---- stars --------------------------------------------------------------
+
+    def star_members(self, ps: int, t: float) -> np.ndarray:
+        return self.timeline.visible_sats(t, ps)
+
+    def visible_ps_of(self, sat: int, t: float) -> List[int]:
+        return list(np.flatnonzero(self.timeline.visible(t)[sat]))
+
+    # ---- SAT-layer ISL ring --------------------------------------------------
+
+    def orbit_sats(self, orbit: int) -> np.ndarray:
+        N = self.constellation.sats_per_orbit
+        return np.arange(orbit * N, (orbit + 1) * N)
+
+    def isl_neighbors(self, sat: int) -> Tuple[int, int]:
+        N = self.constellation.sats_per_orbit
+        o, s = divmod(sat, N)
+        return o * N + (s - 1) % N, o * N + (s + 1) % N
+
+    def isl_ring_distance(self, a: int, b: int) -> int:
+        """Hops along the intra-orbit ring (two-front relay => shorter arc).
+        Satellites on different orbits are unreachable (returns a big int)."""
+        N = self.constellation.sats_per_orbit
+        if a // N != b // N:
+            return 10 ** 9
+        d = abs(a % N - b % N)
+        return min(d, N - d)
+
+    def isl_chord_m(self) -> float:
+        """Distance between ring-adjacent satellites (constant for circular
+        equally-spaced orbits)."""
+        N = self.constellation.sats_per_orbit
+        return float(2 * self.constellation.radius_m * np.sin(np.pi / N))
+
+    def sat_ps_distance(self, sat: int, ps: int, t: float) -> float:
+        sp = self.constellation.positions(t)[sat]
+        return float(np.linalg.norm(sp - self.nodes[ps].position(t)))

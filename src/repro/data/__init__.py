@@ -1,0 +1,7 @@
+from repro.data.synthetic import class_conditional_images, token_stream, batches
+from repro.data.partition import (
+    iid_partition, paper_noniid_partition, dirichlet_partition,
+)
+
+__all__ = ["class_conditional_images", "token_stream", "batches",
+           "iid_partition", "paper_noniid_partition", "dirichlet_partition"]

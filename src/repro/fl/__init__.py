@@ -1,0 +1,5 @@
+from repro.fl.strategies import StrategySpec, STRATEGIES, get_strategy
+from repro.fl.client import ImageClassifierPool, Evaluator, LMPool
+
+__all__ = ["StrategySpec", "STRATEGIES", "get_strategy",
+           "ImageClassifierPool", "Evaluator", "LMPool"]

@@ -1,0 +1,153 @@
+"""FL client pool: on-board local training (paper eq. 3).
+
+Each satellite trains the received global model for J local SGD iterations on
+its own shard.  ``ImageClassifierPool`` is the paper's workload (CNN/MLP on
+image classification); ``LMPool`` trains transformer LMs (our LLM-scale
+federated examples).  Training is jitted once and reused across satellites.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_models import SmallNetConfig
+from repro.models import cnn
+from repro.optim import sgd, apply_updates
+
+
+@dataclasses.dataclass
+class ImageClassifierPool:
+    cfg: SmallNetConfig
+    images: np.ndarray                 # (N, H, W, C)
+    labels: np.ndarray                 # (N,)
+    shards: List[np.ndarray]           # per-satellite index arrays
+    local_iters: int = 30              # J
+    batch_size: int = 32               # b
+    lr: float = 0.01                   # eta (Table I)
+
+    def __post_init__(self):
+        opt = sgd(self.lr)
+        self._true_sizes = [len(s) for s in self.shards]
+        m = min(self._true_sizes)                     # equalize for vmap
+        sel = np.stack([s[:m] for s in self.shards])  # (S, m)
+        self._imgs = jnp.asarray(self.images[sel])    # (S, m, H, W, C)
+        self._labs = jnp.asarray(self.labels[sel])    # (S, m)
+
+        def _train_one(params, imgs, labs, key):
+            state = opt.init(params)
+            n = imgs.shape[0]
+
+            def step(carry, k):
+                params, state = carry
+                idx = jax.random.randint(k, (self.batch_size,), 0, n)
+                loss, grads = jax.value_and_grad(cnn.loss_fn)(
+                    params, self.cfg, imgs[idx], labs[idx])
+                upd, state = opt.update(grads, state, params)
+                return (apply_updates(params, upd), state), loss
+
+            keys = jax.random.split(key, self.local_iters)
+            (params, _), losses = jax.lax.scan(step, (params, state), keys)
+            return params, losses.mean()
+
+        # one jitted vmap over the whole constellation — params broadcast
+        self._train_many = jax.jit(jax.vmap(_train_one, in_axes=(None, 0, 0, 0)))
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.shards)
+
+    def data_size(self, sat: int) -> int:
+        return int(self._true_sizes[sat])
+
+    def train_many(self, sat_ids: Sequence[int], params, seed: int):
+        """Train the given satellites from the same global model in one
+        batched call.  Returns (list of per-sat param pytrees, losses)."""
+        ids = jnp.asarray(list(sat_ids))
+        keys = jax.vmap(lambda s: jax.random.PRNGKey(
+            (np.uint32(seed) * np.uint32(9973)) + s.astype(jnp.uint32)))(ids)
+        stacked, losses = self._train_many(params, self._imgs[ids],
+                                           self._labs[ids], keys)
+        stacked = jax.device_get(stacked)
+        outs = [jax.tree.map(lambda a: a[i], stacked) for i in range(len(ids))]
+        return outs, np.asarray(losses)
+
+    def train(self, sat: int, params, seed: int):
+        outs, losses = self.train_many([sat], params, seed)
+        return outs[0], float(losses[0])
+
+
+@dataclasses.dataclass
+class Evaluator:
+    cfg: SmallNetConfig
+    images: np.ndarray
+    labels: np.ndarray
+
+    def __post_init__(self):
+        self._acc = jax.jit(functools.partial(cnn.accuracy, cfg=self.cfg))
+
+    def __call__(self, params) -> float:
+        return float(self._acc(params, images=jnp.asarray(self.images),
+                               labels=jnp.asarray(self.labels)))
+
+
+@dataclasses.dataclass
+class LMPool:
+    """Federated LM pretraining pool (tokens partitioned across satellites)."""
+    model_cfg: object                  # ModelConfig
+    tokens: np.ndarray                 # (N_seqs, seq_len)
+    shards: List[np.ndarray]
+    local_iters: int = 4
+    batch_size: int = 4
+    lr: float = 1e-3
+
+    def __post_init__(self):
+        from repro.models import registry as R
+        from repro.optim import adamw
+        opt = adamw(self.lr)
+        cfg = self.model_cfg
+
+        @jax.jit
+        def _train(params, toks, key):
+            state = opt.init(params)
+            n = toks.shape[0]
+
+            def step(carry, k):
+                params, state = carry
+                idx = jax.random.randint(k, (self.batch_size,), 0, n)
+                (loss, _), grads = jax.value_and_grad(
+                    R.train_loss, has_aux=True)(params, cfg, {"tokens": toks[idx]})
+                upd, state = opt.update(grads, state, params)
+                return (apply_updates(params, upd), state), loss
+
+            keys = jax.random.split(key, self.local_iters)
+            (params, _), losses = jax.lax.scan(step, (params, state), keys)
+            return params, losses.mean()
+
+        self._train = _train
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.shards)
+
+    def data_size(self, sat: int) -> int:
+        return int(len(self.shards[sat]))
+
+    def train(self, sat: int, params, seed: int):
+        sel = self.shards[sat]
+        toks = jnp.asarray(self.tokens[sel])
+        key = jax.random.PRNGKey(np.uint32(seed * 7919 + sat))
+        new_params, loss = self._train(params, toks, key)
+        return jax.device_get(new_params), float(loss)
+
+    def train_many(self, sat_ids, params, seed: int):
+        outs, losses = [], []
+        for s in sat_ids:
+            p, l = self.train(int(s), params, seed)
+            outs.append(p)
+            losses.append(l)
+        return outs, np.asarray(losses)

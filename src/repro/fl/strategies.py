@@ -1,0 +1,62 @@
+"""FL-Satcom strategies: AsyncFLEO and the paper's baselines (§II, §V-A).
+
+Each strategy is a declarative spec consumed by ``repro.core.simulator``:
+
+=================  ====== ======= ========== ============ =====================
+strategy           sync   ISL     grouping   aggregation  PS placement
+=================  ====== ======= ========== ============ =====================
+asyncfleo-gs       no     yes     yes        asyncfleo    GS, arbitrary (Rolla)
+asyncfleo-hap      no     yes     yes        asyncfleo    1 HAP, arbitrary
+asyncfleo-twohap   no     yes     yes        asyncfleo    2 HAPs (ring)
+fedavg / fedisl    yes    yes     no         fedavg       GS, arbitrary
+fedisl-ideal       yes    yes     no         fedavg       GS at the North Pole
+fedsat             no     no      no         per-arrival  GS at the North Pole
+fedspace           no     no      no         interval     GS, arbitrary
+fedhap             yes    yes     no         fedavg       1 HAP
+=================  ====== ======= ========== ============ =====================
+
+FedSpace's real scheduler optimizes the schedule from uploaded raw-data
+fractions (which AsyncFLEO criticizes); we emulate its idle-vs-staleness
+trade-off with a fixed-interval staleness-weighted aggregation (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategySpec:
+    name: str
+    sync: bool
+    use_isl: bool
+    grouping: bool
+    agg_mode: str                    # asyncfleo | fedavg | per_arrival | interval
+    ps_scenario: str                 # gs | hap | twohap | gs-np
+    interval_s: float = 1800.0       # for agg_mode == interval
+    num_groups: int = 3
+    strict_paper_eq14: bool = False
+    use_agg_kernel: bool = False     # route eq. 14 through the Pallas kernel
+
+
+STRATEGIES = {
+    "asyncfleo-gs": StrategySpec("asyncfleo-gs", False, True, True,
+                                 "asyncfleo", "gs"),
+    "asyncfleo-hap": StrategySpec("asyncfleo-hap", False, True, True,
+                                  "asyncfleo", "hap"),
+    "asyncfleo-twohap": StrategySpec("asyncfleo-twohap", False, True, True,
+                                     "asyncfleo", "twohap"),
+    "fedisl": StrategySpec("fedisl", True, True, False, "fedavg", "gs"),
+    "fedisl-ideal": StrategySpec("fedisl-ideal", True, True, False,
+                                 "fedavg", "gs-np"),
+    "fedsat": StrategySpec("fedsat", False, False, False,
+                           "per_arrival", "gs-np"),
+    "fedspace": StrategySpec("fedspace", False, False, False,
+                             "interval", "gs"),
+    "fedhap": StrategySpec("fedhap", True, True, False, "fedavg", "hap"),
+}
+
+
+def get_strategy(name: str) -> StrategySpec:
+    if name not in STRATEGIES:
+        raise KeyError(f"unknown strategy {name!r}; available: {sorted(STRATEGIES)}")
+    return STRATEGIES[name]

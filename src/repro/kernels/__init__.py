@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Targets TPU (pl.pallas_call + BlockSpec VMEM tiling); this container is
+CPU-only so every public op takes ``interpret=`` (default auto: True on CPU)
+and the test-suite validates each kernel against its pure-jnp oracle in
+interpret mode across shape/dtype sweeps.
+
+  flash_attention — block-tiled causal/windowed GQA attention (prefill path)
+  chunk_scan      — chunked linear recurrence (RWKV6 vector decay /
+                    Mamba2-SSD scalar decay)
+  fed_agg         — staleness-discounted model aggregation (paper eq. 14)
+  pairwise_dist   — pairwise squared-L2 between flattened models (grouping)
+"""
+import jax
+
+
+def default_interpret() -> bool:
+    return jax.devices()[0].platform != "tpu"

@@ -1,0 +1,2 @@
+from repro.kernels.chunk_scan import ops, ref
+from repro.kernels.chunk_scan.ops import chunk_scan

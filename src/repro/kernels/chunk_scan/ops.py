@@ -1,0 +1,37 @@
+"""Public API for chunk_scan: (B,T,H,·) layout plumbing around the kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.chunk_scan.kernel import chunk_scan_flat
+from repro.models.scan_ops import _prep_decay
+
+
+def chunk_scan(r, k, v, log_decay, state0=None, *, include_current=True,
+               bonus=None, chunk: int = 64,
+               interpret: Optional[bool] = None):
+    """Same contract as models.scan_ops.chunked_scan (B,T,H,·)."""
+    if interpret is None:
+        interpret = default_interpret()
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    ld = _prep_decay(log_decay, K)
+
+    def flat(x):                       # (B,T,H,X) -> (B*H, T, X)
+        return x.transpose(0, 2, 1, 3).reshape(B * H, T, x.shape[-1])
+
+    s0 = (jnp.zeros((B, H, K, V), jnp.float32) if state0 is None
+          else state0.astype(jnp.float32)).reshape(B * H, K, V)
+    u = (jnp.zeros((H, K), jnp.float32) if bonus is None
+         else bonus.astype(jnp.float32))
+    u = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, K)
+
+    y, s_fin = chunk_scan_flat(flat(r), flat(k), flat(v), flat(ld), s0, u,
+                               include_current=include_current,
+                               chunk=min(chunk, T), interpret=interpret)
+    y = y.reshape(B, H, T, V).transpose(0, 2, 1, 3)
+    return y.astype(v.dtype), s_fin.reshape(B, H, K, V)

@@ -1,0 +1,8 @@
+"""Oracle for chunk_scan: the sequential recurrence from models/scan_ops."""
+from repro.models.scan_ops import recurrent_scan
+
+
+def chunk_scan_ref(r, k, v, log_decay, state0=None, *, include_current=True,
+                   bonus=None):
+    return recurrent_scan(r, k, v, log_decay, state0,
+                          include_current=include_current, bonus=bonus)

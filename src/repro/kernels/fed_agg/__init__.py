@@ -1,0 +1,2 @@
+from repro.kernels.fed_agg import ops, ref
+from repro.kernels.fed_agg.ops import fed_agg, fed_agg_pytree

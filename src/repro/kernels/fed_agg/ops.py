@@ -1,0 +1,55 @@
+"""Public API for the fed_agg kernel: flat and pytree forms."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import default_interpret
+from repro.kernels.fed_agg.kernel import fed_agg_flat
+
+
+def fed_agg(stack, gamma, base=None, base_weight: float = 0.0, *,
+            interpret: Optional[bool] = None):
+    """out = base_weight * base + sum_c gamma[c] * stack[c]   (flat (C,N))."""
+    if interpret is None:
+        interpret = default_interpret()
+    if base is None:
+        base = jnp.zeros((stack.shape[1],), jnp.float32)
+        base_weight = 0.0
+    return fed_agg_flat(stack, gamma, base, base_weight, interpret=interpret)
+
+
+def fed_agg_pytree(models: Sequence, gamma: np.ndarray, base=None,
+                   base_weight: float = 0.0, *,
+                   interpret: Optional[bool] = None):
+    """Aggregate a list of model pytrees into one (paper eq. 14).
+
+    Flattens every model once, runs a single fused kernel pass over the
+    concatenated parameter vector, and unflattens back to the tree
+    structure.
+    """
+    leaves_list = [jax.tree_util.tree_leaves(m) for m in models]
+    treedef = jax.tree_util.tree_structure(models[0])
+    flat_models = jnp.stack([
+        jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+        for leaves in leaves_list])
+    if base is not None:
+        base_leaves = jax.tree_util.tree_leaves(base)
+        flat_base = jnp.concatenate([jnp.ravel(l).astype(jnp.float32)
+                                     for l in base_leaves])
+    else:
+        flat_base = None
+    out = fed_agg(flat_models, jnp.asarray(gamma), flat_base, base_weight,
+                  interpret=interpret)
+    # unflatten
+    sizes = [int(np.prod(l.shape)) for l in leaves_list[0]]
+    shapes = [l.shape for l in leaves_list[0]]
+    parts = []
+    off = 0
+    for size, shape in zip(sizes, shapes):
+        parts.append(out[off:off + size].reshape(shape))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, parts)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the fed_agg kernel."""
+import jax.numpy as jnp
+
+
+def fed_agg_flat_ref(stack, gamma, base, base_weight):
+    stack = stack.astype(jnp.float32)
+    return (jnp.asarray(base_weight, jnp.float32) * base.astype(jnp.float32)
+            + jnp.einsum("c,cn->n", gamma.astype(jnp.float32), stack))

@@ -1,0 +1,120 @@
+"""Pallas kernel: block-tiled attention with online softmax (flash-style).
+
+Grid = (B*H, Sq/BQ, Sk/BK); the key axis is innermost and sequential,
+carrying the running max / denominator / accumulator in VMEM scratch.
+Causal and sliding-window masks are applied per block from program ids;
+fully-masked key blocks still iterate (Pallas grids are dense) but skip the
+matmul via pl.when — on TPU the MXU sits idle for ~half the blocks of a
+causal prefill, which is the expected 2x.
+
+BQ/BK default to 128 — MXU-aligned (128x128 systolic array) and small enough
+that q/k/v tiles + scratch fit VMEM comfortably:
+(BQ+2*BK)*hd*4B + BQ*(hd+2)*4B ≈ 0.4 MB at hd=128.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 128
+BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: int, scale: float, bq: int, bk: int,
+                  seq_k: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = kj * bk
+    # block-level reachability (skip matmul when fully masked)
+    reachable = True
+    if causal:
+        reachable = k_start <= q_start + bq - 1
+    if window:
+        reachable = jnp.logical_and(reachable,
+                                    k_start + bk - 1 > q_start - window)
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (BQ, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (BK, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (BQ, BK)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = kpos < seq_k
+        if causal:
+            ok = jnp.logical_and(ok, kpos <= qpos)
+        if window:
+            ok = jnp.logical_and(ok, qpos - kpos < window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # (BQ, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = corr * l_scr[...] + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = (corr * acc_scr[...]
+                        + jnp.dot(p, v, preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(kj == pl.num_programs(2) - 1)
+    def _emit():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret",
+                                             "bq", "bk"))
+def flash_attention_flat(q, k, v, *, causal: bool = True, window: int = 0,
+                         interpret: bool = True, bq: int = BQ, bk: int = BK):
+    """q: (BH, Sq, hd); k, v: (BH, Sk, hd). Returns (BH, Sq, hd)."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    Sqp, Skp = Sq + pad_q, Sk + pad_k
+    grid = (BH, Sqp // bq, Skp // bk)
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window,
+        scale=1.0 / math.sqrt(hd), bq=bq, bk=bk, seq_k=Sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda i, j, l: (i, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda i, j, l: (i, l, 0)),
+            pl.BlockSpec((1, bk, hd), lambda i, j, l: (i, l, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda i, j, l: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sqp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

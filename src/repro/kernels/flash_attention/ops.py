@@ -1,0 +1,32 @@
+"""Public API: GQA-aware flash attention over (B, S, H, hd) layout."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.flash_attention.kernel import flash_attention_flat
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    interpret: Optional[bool] = None):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0.
+    KV heads are repeated to H before the kernel (optimization opportunity:
+    group the grid by KV head instead — see EXPERIMENTS.md §Perf)."""
+    if interpret is None:
+        interpret = default_interpret()
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, x.shape[1], hd)
+
+    out = flash_attention_flat(flat(q), flat(k), flat(v), causal=causal,
+                               window=window, interpret=interpret)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

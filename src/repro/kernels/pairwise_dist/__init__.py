@@ -1,0 +1,2 @@
+from repro.kernels.pairwise_dist import ops, ref
+from repro.kernels.pairwise_dist.ops import pairwise_dist, model_pairwise_dist

@@ -1,0 +1,27 @@
+"""Public API: pairwise distances between model pytrees (grouping step)."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.pairwise_dist.kernel import pairwise_dist_sq
+
+
+def pairwise_dist(x, *, squared: bool = False,
+                  interpret: Optional[bool] = None):
+    """x: (M, N) stacked flat models -> (M, M) L2 (or squared) distances."""
+    if interpret is None:
+        interpret = default_interpret()
+    d2 = pairwise_dist_sq(x, interpret=interpret)
+    return d2 if squared else jnp.sqrt(d2)
+
+
+def model_pairwise_dist(models: Sequence, *, interpret: Optional[bool] = None):
+    flat = jnp.stack([
+        jnp.concatenate([jnp.ravel(l).astype(jnp.float32)
+                         for l in jax.tree_util.tree_leaves(m)])
+        for m in models])
+    return pairwise_dist(flat, interpret=interpret)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for pairwise_dist."""
+import jax.numpy as jnp
+
+
+def pairwise_dist_sq_ref(x):
+    x = x.astype(jnp.float32)
+    diff = x[:, None, :] - x[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)

@@ -1,0 +1,4 @@
+from repro.launch.mesh import (
+    make_production_mesh, make_host_mesh,
+    PEAK_FLOPS_BF16, HBM_BW, ICI_BW_PER_LINK, ICI_LINKS,
+)

@@ -1,0 +1,161 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+mesh and extract roofline inputs — no real allocation (ShapeDtypeStructs).
+
+MUST be run as its own process (the XLA flag above is read at first jax
+init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+        --shape train_4k [--multi-pod] [--rules base|fsdp] [--out out.json]
+
+Exit code 0 = lower+compile succeeded; the JSON artifact carries
+cost_analysis, memory_analysis, and parsed collective traffic for
+benchmarks/roofline.py.
+"""
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_shape, applicable, SHAPES, ARCHS
+from repro.launch import sharding as sh
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (cache_specs, input_specs, opt_state_specs,
+                                param_specs)
+from repro.launch.steps import (cache_len_for, make_decode_step,
+                                make_prefill_step, make_train_step,
+                                make_optimizer, window_for)
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               rules_name: str = "base", donate: bool = False,
+               remat: bool = True, verbose: bool = True,
+               q_chunks: int = 1, capacity_factor: float = None) -> dict:
+    cfg = get_config(arch).replace(remat=remat)
+    if capacity_factor is not None:
+        cfg = cfg.replace(moe_capacity_factor=capacity_factor)
+    shape = get_shape(shape_name)
+    if not applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "encoder-only has no decode step (DESIGN.md)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = sh.RULE_SETS[rules_name]
+    window = window_for(cfg, shape)
+
+    p_spec = param_specs(cfg)
+    p_shard = sh.tree_shardings(p_spec, mesh, rules)
+    batch = input_specs(cfg, shape)
+    b_shard = sh.batch_shardings(batch, mesh, rules)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            o_spec = opt_state_specs(cfg, p_spec)
+            o_shard = sh.tree_shardings(o_spec, mesh, rules)
+            step = make_train_step(cfg, make_optimizer(), window=window,
+                                   q_chunks=q_chunks)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, o_shard, b_shard),
+                             donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(p_spec, o_spec, batch)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, window=window, q_chunks=q_chunks)
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(p_spec, batch)
+        else:                                            # decode / serve_step
+            c_spec = cache_specs(cfg, shape)
+            c_shard = sh.tree_shardings(c_spec, mesh, rules)
+            step = make_decode_step(cfg, window=window)
+            jitted = jax.jit(step, in_shardings=(p_shard, c_shard, b_shard),
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(p_spec, c_spec, batch)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else (cost or {})
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "rules": rules_name, "mesh_shape": list(mesh.devices.shape),
+        "num_devices": int(n_dev),
+        "window": window,
+        "q_chunks": q_chunks,
+        "capacity_factor": cfg.moe_capacity_factor,
+        "remat": remat,
+        "cache_len": cache_len_for(cfg, shape) if shape.kind == "decode" else 0,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "collective_bytes": coll,
+        "memory": {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "params": int(ARCHS[arch].param_count()),
+        "active_params": int(ARCHS[arch].active_param_count()),
+        "hlo_bytes": len(hlo),
+        "skipped": False,
+    }
+    if verbose:
+        print(json.dumps({k: v for k, v in result.items() if k != "memory"},
+                         indent=None), flush=True)
+        print("memory_analysis:", result["memory"], flush=True)
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS) + ["all"])
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES) + ["all"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rules", default="base", choices=sorted(sh.RULE_SETS))
+    ap.add_argument("--donate", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--q-chunks", type=int, default=1)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = sorted(SHAPES) if args.shape == "all" else [args.shape]
+    results = []
+    failures = 0
+    for a in archs:
+        for s in shapes:
+            try:
+                results.append(dryrun_one(a, s, multi_pod=args.multi_pod,
+                                          rules_name=args.rules,
+                                          donate=args.donate,
+                                          remat=not args.no_remat,
+                                          q_chunks=args.q_chunks,
+                                          capacity_factor=args.capacity_factor))
+            except Exception as e:          # a dry-run failure is a bug
+                failures += 1
+                results.append({"arch": a, "shape": s, "error": repr(e)[:500],
+                                "skipped": False})
+                print(f"FAIL {a} {s}: {e}", file=sys.stderr, flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

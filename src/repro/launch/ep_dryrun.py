@@ -1,0 +1,93 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+"""Dry-run comparison: GSPMD sort-dispatch MoE vs explicit expert-parallel
+all-to-all (models/moe_ep.py) at production scale — one MoE layer of the
+given arch at train_4k token counts on the 16x16 mesh.
+
+    PYTHONPATH=src python -m repro.launch.ep_dryrun --arch kimi-k2-1t-a32b \
+        [--out out.json]
+"""
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.models import moe as MOE
+from repro.models.moe_ep import make_ep_moe_layer
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="kimi-k2-1t-a32b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = get_shape(args.shape)
+    mesh = make_production_mesh()
+    B, S, d = shape.global_batch, shape.seq_len, cfg.d_model
+    E, f = cfg.num_experts, cfg.moe_d_ff or cfg.d_ff
+
+    p_spec = {
+        "router": jax.ShapeDtypeStruct((d, E), jnp.float32),
+        "we1": jax.ShapeDtypeStruct((E, d, f), jnp.float32),
+        "we3": jax.ShapeDtypeStruct((E, d, f), jnp.float32),
+        "we2": jax.ShapeDtypeStruct((E, f, d), jnp.float32),
+    }
+    x_spec = jax.ShapeDtypeStruct((B, S, d), jnp.dtype(cfg.dtype))
+
+    results = {}
+    with mesh:
+        # --- GSPMD sort-dispatch ------------------------------------------
+        p_shard = {
+            "router": NamedSharding(mesh, P()),
+            "we1": NamedSharding(mesh, P("model")),
+            "we3": NamedSharding(mesh, P("model")),
+            "we2": NamedSharding(mesh, P("model")),
+        }
+        x_shard = NamedSharding(mesh, P("data", None, None))
+
+        def gspmd_layer(p, x):
+            out, aux = MOE.moe_ffn(p, cfg, x)
+            return out, aux
+
+        for name, fn, shardings in [
+            ("gspmd_dispatch", gspmd_layer, (p_shard, x_shard)),
+            ("explicit_ep",
+             lambda p, x: make_ep_moe_layer(cfg, mesh)(p, x), None),
+        ]:
+            t0 = time.time()
+            if shardings is not None:
+                jitted = jax.jit(fn, in_shardings=shardings)
+            else:
+                jitted = jax.jit(fn)
+            lowered = jitted.lower(p_spec, x_spec)
+            compiled = lowered.compile()
+            coll = collective_bytes(compiled.as_text())
+            mem = compiled.memory_analysis()
+            results[name] = {
+                "compile_s": round(time.time() - t0, 2),
+                "collective_bytes": coll,
+                "temp_gb_per_dev": round((getattr(mem, "temp_size_in_bytes", 0)
+                                          or 0) / mesh.devices.size / 2**30, 3),
+            }
+            print(name, json.dumps(results[name]), flush=True)
+
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump({"arch": args.arch, "shape": args.shape, **results}, fh,
+                      indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

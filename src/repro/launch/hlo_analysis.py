@@ -1,0 +1,64 @@
+"""Post-compile HLO analysis: collective-traffic accounting for the roofline.
+
+``cost_analysis()`` has FLOPs and bytes but no collective traffic, so we
+parse the optimized HLO text and sum output-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Shapes like ``bf16[8,1024,128]`` are parsed from the op result type;
+tuple results (e.g. fused all-reduces) contribute every element.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind total bytes (output sizes) + op counts."""
+    out: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # op lines look like:  %name = bf16[...] all-reduce(...), replica_groups=...
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^ ]+)\s+([\w\-]+)", stripped)
+        if not m:
+            continue
+        type_str, opname = m.group(1), m.group(2)
+        for coll in _COLLECTIVES:
+            if opname == coll or opname.startswith(coll + "-start"):
+                out[coll] += _shape_bytes(type_str)
+                counts[coll] += 1
+                break
+    result = dict(out)
+    result["_counts"] = dict(counts)
+    result["total"] = int(sum(v for k, v in out.items()))
+    return result
+
+
+def remat_duplication(hlo_text: str) -> float:
+    """Crude remat indicator: ratio of dot/convolution ops to unique ones by
+    shape signature (duplicate compute from rematerialization shows up as
+    repeated identical op types)."""
+    dots = re.findall(r"=\s*[^ ]+\s+dot\(", hlo_text)
+    return float(len(dots))

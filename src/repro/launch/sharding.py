@@ -1,0 +1,194 @@
+"""Logical-axis sharding rules (MaxText-style, data not code).
+
+Every parameter / cache / batch leaf is classified into a tuple of *logical*
+dimension names by (leaf name, rank); a rules dict maps logical names to mesh
+axes.  ``partition_spec`` additionally enforces divisibility — a dimension
+that does not divide by its mesh-axis size is silently replicated (e.g.
+starcoder2's kv_heads=2 or internvl2's 14 query heads on a 16-way model
+axis), which keeps every (arch x mesh) combination lowerable without
+per-arch special cases.
+
+Rule sets are the main §Perf lever:
+  BASE_RULES  — tensor parallelism on 'model', batch on ('pod','data').
+  FSDP_RULES  — adds ZeRO-3-style parameter/optimizer sharding: the 'embed'
+                dimension of weight matrices shards over 'data'.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Tuple[Optional[str], ...]
+
+# ---- leaf classification ----------------------------------------------------
+
+_NAME_RULES: Dict[Tuple[str, int], Logical] = {
+    # embeddings / head
+    ("embedding", 2): ("vocab", "embed"),
+    ("unembed", 2): ("embed", "vocab"),
+    ("pos_embed", 2): (None, "embed"),
+    # attention (dense GQA)
+    ("wq", 3): ("embed", "heads", "head"),
+    ("wk", 3): ("embed", "kv_heads", "head"),
+    ("wv", 3): ("embed", "kv_heads", "head"),
+    ("wo", 3): ("heads", "head", "embed"),
+    # MLP / MoE (routed-expert weights are named we* so the stacked dense
+    # (layer, d, f) tensors never collide with the (expert, d, f) rule)
+    ("w1", 2): ("embed", "mlp"),
+    ("w3", 2): ("embed", "mlp"),
+    ("w2", 2): ("mlp", "embed"),
+    ("we1", 3): ("expert", "embed", "moe_mlp"),
+    ("we3", 3): ("expert", "embed", "moe_mlp"),
+    ("we2", 3): ("expert", "moe_mlp", "embed"),
+    ("router", 2): ("embed", "expert"),
+    # MLA
+    ("w_dkv", 2): ("embed", "kv_lora"),
+    ("w_kr", 2): ("embed", None),
+    ("w_uk", 3): ("kv_lora", "heads", "head"),
+    ("w_uv", 3): ("kv_lora", "heads", "head"),
+    ("w_dq", 2): ("embed", "q_lora"),
+    ("w_uq", 3): ("q_lora", "heads", "head"),
+    # RWKV (time-mix projections are tm_w* to avoid dense-attention collisions)
+    ("tm_wr", 2): ("embed", "inner"),
+    ("tm_wg", 2): ("embed", "inner"),
+    ("tm_wk", 2): ("embed", "inner"),
+    ("tm_wv", 2): ("embed", "inner"),
+    ("tm_wo", 2): ("inner", "embed"),
+    ("tm_w1", 2): ("embed", None),
+    ("tm_w2", 3): (None, None, "embed"),
+    ("td_w1", 2): ("embed", None),
+    ("td_w2", 2): (None, "embed"),
+    ("cm_wk", 2): ("embed", "mlp"),
+    ("cm_wv", 2): ("mlp", "embed"),
+    ("cm_wr", 2): ("embed", "inner"),
+    ("u", 2): ("heads", "head"),
+    # Mamba
+    ("in_proj", 2): ("embed", "inner"),
+    ("conv_w", 2): (None, "inner"),
+    ("out_proj", 2): ("inner", "embed"),
+    # decode caches
+    ("k", 5): ("layer", "batch", "kv_seq", "kv_heads", "head"),
+    ("v", 5): ("layer", "batch", "kv_seq", "kv_heads", "head"),
+    ("attn_k", 5): ("layer", "batch", "kv_seq", "kv_heads", "head"),
+    ("attn_v", 5): ("layer", "batch", "kv_seq", "kv_heads", "head"),
+    ("c_kv", 4): ("layer", "batch", "kv_seq", "kv_lora"),
+    ("k_rope", 4): ("layer", "batch", "kv_seq", None),
+    ("ssm", 5): ("layer", "batch", "heads", None, None),
+    ("ssm", 6): ("layer", None, "batch", "heads", None, None),
+    ("conv", 4): ("layer", "batch", None, "inner"),
+    ("conv", 5): ("layer", None, "batch", None, "inner"),
+    ("wkv", 5): ("layer", "batch", "heads", "head", None),
+    ("tm_x", 3): ("layer", "batch", "embed"),
+    ("cm_x", 3): ("layer", "batch", "embed"),
+}
+
+
+def classify_leaf(name: str, ndim: int) -> Logical:
+    """Logical dims for a leaf; extra leading dims (layer stacking / optimizer
+    slots) are padded with 'layer'/None on the left."""
+    for extra in range(ndim + 1):
+        rule = _NAME_RULES.get((name, ndim - extra))
+        if rule is not None:
+            return (None,) * extra + rule
+    return (None,) * ndim
+
+
+# ---- rules ------------------------------------------------------------------
+
+BASE_RULES: Dict[str, object] = {
+    "vocab": "model", "heads": "model", "kv_heads": "model", "mlp": "model",
+    "moe_mlp": "model", "expert": "model", "inner": "model",
+    "embed": None, "head": None, "kv_lora": None, "q_lora": None,
+    "batch": ("pod", "data"), "seq": None, "kv_seq": "data", "layer": None,
+}
+
+FSDP_RULES = dict(BASE_RULES, embed="data")
+
+RULE_SETS = {"base": BASE_RULES, "fsdp": FSDP_RULES}
+
+
+def _mesh_axes(mesh: Mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def partition_spec(shape, logical: Logical, mesh: Mesh,
+                   rules: Dict[str, object]) -> P:
+    """Resolve logical dims to a PartitionSpec with divisibility checks and
+    no mesh axis used twice."""
+    sizes = _mesh_axes(mesh)
+    used = set()
+    out = []
+    for dim, lg in zip(shape, logical):
+        if lg is None or lg not in rules or rules[lg] is None:
+            out.append(None)
+            continue
+        axes = rules[lg]
+        if isinstance(axes, str):
+            axes = (axes,)
+        picked = []
+        rem = dim
+        for ax in axes:
+            if ax not in sizes or ax in used:
+                continue
+            if rem % sizes[ax] != 0:
+                continue
+            picked.append(ax)
+            used.add(ax)
+            rem //= sizes[ax]
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    return P(*out)
+
+
+def tree_shardings(tree, mesh: Mesh, rules: Dict[str, object]):
+    """NamedShardings for an arbitrary params/cache/opt-state pytree.
+    ``tree`` may hold arrays or ShapeDtypeStructs."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = None
+        for p in reversed(path):
+            key = getattr(p, "key", None)
+            if isinstance(key, str) and key not in ("m", "v", "mu"):
+                name = key
+                break
+        name = name or ""
+        logical = classify_leaf(name, len(leaf.shape))
+        spec = partition_spec(leaf.shape, logical, mesh, rules)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree), out)
+
+
+def batch_shardings(batch, mesh: Mesh, rules: Dict[str, object]):
+    """Shardings for input batches: leading dim is 'batch', dim 1 is 'seq'."""
+    def spec_for(leaf):
+        logical: Logical = ("batch",) + ("seq",) + (None,) * (len(leaf.shape) - 2) \
+            if len(leaf.shape) >= 2 else ("batch",) * len(leaf.shape)
+        return NamedSharding(mesh, partition_spec(leaf.shape, logical, mesh, rules))
+    return jax.tree.map(spec_for, batch)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def sharded_fraction(tree, shardings) -> float:
+    """Fraction of bytes that is sharded (diagnostic for rule coverage)."""
+    total = 0
+    sharded = 0
+    for leaf, sh in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(
+                            shardings, is_leaf=lambda x: isinstance(x, NamedSharding))):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        total += n
+        if any(s is not None for s in sh.spec):
+            sharded += n
+    return sharded / max(total, 1)

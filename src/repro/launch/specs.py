@@ -1,0 +1,55 @@
+"""Abstract input specs for the dry-run: ShapeDtypeStruct stand-ins for every
+model input / parameter / optimizer leaf — weak-type-correct, shardable, no
+device allocation."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.steps import cache_len_for, make_optimizer
+from repro.models import registry as R
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Abstract batch for (arch, shape) — the paper-assigned global shapes."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": _sds((B, 1), jnp.int32)}
+    if cfg.frontend == "audio_stub":
+        out = {"frame_embeds": _sds((B, S, cfg.d_model), cfg.dtype),
+               "labels": _sds((B, S), jnp.int32),
+               "mask": _sds((B, S), jnp.bool_)}
+        if shape.kind == "prefill":
+            out.pop("labels")
+            out.pop("mask")
+        return out
+    if cfg.frontend == "vision_stub":
+        P = cfg.num_prefix_embeds
+        return {"tokens": _sds((B, max(S - P, 1)), jnp.int32),
+                "prefix_embeds": _sds((B, P, cfg.d_model), cfg.dtype)}
+    return {"tokens": _sds((B, S), jnp.int32)}
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: R.init_params(k, cfg),
+                          _sds((2,), jnp.uint32))
+
+
+def opt_state_specs(cfg: ModelConfig, params_spec=None):
+    opt = make_optimizer()
+    params_spec = params_spec or param_specs(cfg)
+    return jax.eval_shape(opt.init, params_spec)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    assert shape.kind == "decode"
+    cl = cache_len_for(cfg, shape)
+    return jax.eval_shape(
+        lambda: R.init_cache(cfg, shape.global_batch, cl, jnp.dtype(cfg.dtype)))

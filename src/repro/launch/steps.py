@@ -1,0 +1,67 @@
+"""Step functions lowered by the dry-run and used by the real drivers.
+
+  train_step(params, opt_state, batch)   -> (params, opt_state, loss)
+  prefill_step(params, batch)            -> logits
+  decode_step(params, cache, tokens)     -> (logits, cache)   [serve_step]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, LONG_CONTEXT_WINDOW
+from repro.models import registry as R
+from repro.optim import adamw, apply_updates, Optimizer
+
+
+def window_for(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Sliding-window size: full-attention archs get a window only for
+    long_500k (the sub-quadratic carve-out); SSM/hybrid run native — the
+    hybrid's shared-attention cache is itself windowed at long context."""
+    if shape.name == "long_500k" and (cfg.num_heads > 0 or cfg.use_mla):
+        return LONG_CONTEXT_WINDOW
+    return 0
+
+
+def cache_len_for(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    w = window_for(cfg, shape)
+    return min(shape.seq_len, w) if w else shape.seq_len
+
+
+def make_optimizer(lr: float = 3e-4) -> Optimizer:
+    return adamw(lr, weight_decay=0.1)
+
+
+def make_train_step(cfg: ModelConfig, opt: Optional[Optimizer] = None,
+                    window: int = 0, impl: str = "xla", q_chunks: int = 1):
+    opt = opt or make_optimizer()
+
+    def train_step(params, opt_state, batch):
+        (loss, _metrics), grads = jax.value_and_grad(
+            R.train_loss, has_aux=True)(params, cfg, batch,
+                                        window=window, impl=impl,
+                                        q_chunks=q_chunks)
+        updates, opt_state2 = opt.update(grads, opt_state, params)
+        params2 = apply_updates(params, updates)
+        return params2, opt_state2, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, window: int = 0, impl: str = "xla",
+                      q_chunks: int = 1):
+    def prefill_step(params, batch):
+        logits, _aux = R.apply(params, cfg, batch, window=window, impl=impl,
+                               q_chunks=q_chunks)
+        return logits
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, window: int = 0):
+    def decode_step(params, cache, batch):
+        tokens = batch["tokens"] if isinstance(batch, dict) else batch
+        return R.decode_step(params, cfg, cache, tokens, window=window)
+    return decode_step

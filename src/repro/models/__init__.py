@@ -1,0 +1,8 @@
+from repro.models import registry
+from repro.models.registry import (
+    init_params, apply, init_cache, decode_step, train_loss,
+    analytic_param_count,
+)
+
+__all__ = ["registry", "init_params", "apply", "init_cache", "decode_step",
+           "train_loss", "analytic_param_count"]

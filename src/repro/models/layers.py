@@ -1,0 +1,238 @@
+"""Shared neural-net building blocks (pure JAX, functional, pytree params).
+
+Conventions
+-----------
+* Params are nested dicts of jnp arrays.  Layer-stacked params carry a
+  leading ``L`` axis and are consumed by ``jax.lax.scan``.
+* Compute dtype is ``cfg.dtype`` (bf16 by default); params are kept in
+  ``cfg.param_dtype`` (f32 master copies) and cast at use.
+* Attention weights are stored 3-D ``(embed, heads, head_dim)`` so the
+  ``heads`` axis can be tensor-sharded by name (see launch/sharding.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (matches common transformer practice)."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# normalization
+# --------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def group_norm_heads(x, scale, bias, eps: float = 64e-5):
+    """Per-head group norm used by RWKV time-mix output. x: (..., H, hd)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd) or (..., S, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                              # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    if x.ndim == angles.ndim + 1:                              # has heads axis
+        angles = angles[..., None, :]                          # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA, optional qk_norm / sliding window / bidirectional)
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), in_axis_size=d),
+        "wk": dense_init(ks[1], (d, KV, hd), in_axis_size=d),
+        "wv": dense_init(ks[2], (d, KV, hd), in_axis_size=d),
+        "wo": dense_init(ks[3], (H, hd, d), in_axis_size=H * hd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,))
+        p["k_norm"] = jnp.ones((hd,))
+    return p
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int, dtype):
+    """Additive mask bias (..., Sq, Sk) from query/key positions."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(diff.shape, dtype=bool)
+    if causal:
+        ok &= diff >= 0
+    if window:
+        ok &= diff < window
+    return jnp.where(ok, 0.0, -1e30).astype(dtype)
+
+
+def attention_scores(q, k, v, q_pos, k_pos, *, causal, window, kv_groups):
+    """Reference (XLA) attention. q:(B,Sq,H,hd) k,v:(B,Sk,KV,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    q = q.reshape(B, Sq, KV, kv_groups, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    bias = _mask_bias(q_pos, k_pos, causal, window, jnp.float32)  # (B?,Sq,Sk)
+    bias = bias.reshape(bias.shape[:-2] + (1,) * (scores.ndim - bias.ndim)
+                        + bias.shape[-2:])
+    scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention(p, cfg: ModelConfig, x, positions, kv_cache=None, *,
+              window: int = 0, impl: str = "xla", q_chunks: int = 1):
+    """Full GQA attention block.
+
+    ``kv_cache``: None for train/prefill over the whole sequence; else a dict
+    ``{"k","v","index"}`` holding a (possibly ring-buffered) cache for decode.
+    Returns (out, new_cache_or_None).
+    """
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    if kv_cache is not None and positions is None:
+        positions = jnp.broadcast_to(kv_cache["index"][None, None],
+                                     (x.shape[0], x.shape[1]))
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is None:
+        k_pos = positions
+        q_pos = positions
+        kk, vv = k, v
+    else:
+        # decode: write this step's k/v into the ring buffer
+        cache_len = kv_cache["k"].shape[1]
+        idx = kv_cache["index"]                      # scalar int32 steps so far
+        slot = jnp.mod(idx, cache_len)
+        kk = jax.lax.dynamic_update_slice(kv_cache["k"], k.astype(kv_cache["k"].dtype),
+                                          (0, slot, 0, 0))
+        vv = jax.lax.dynamic_update_slice(kv_cache["v"], v.astype(kv_cache["v"].dtype),
+                                          (0, slot, 0, 0))
+        new_cache = {"k": kk, "v": vv, "index": idx + 1}
+        # Reconstruct each ring slot's absolute position from its "age"
+        # relative to the current write slot; slots never written get a huge
+        # positive position so the causal mask removes them.
+        slots = jnp.arange(cache_len)
+        written = jnp.minimum(idx + 1, cache_len)
+        age = jnp.mod(slot - slots, cache_len)       # 0 = newest (this step)
+        k_pos = jnp.where(age < written, idx - age, 10**9)
+        k_pos = jnp.broadcast_to(k_pos, (x.shape[0], cache_len))
+        q_pos = jnp.broadcast_to(jnp.asarray(idx)[None], (x.shape[0], 1))
+        kk = kk.astype(dt)
+        vv = vv.astype(dt)
+
+    if impl == "pallas" and kv_cache is None:
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, kk, vv, causal=cfg.causal, window=window)
+    elif (q_chunks > 1 and kv_cache is None and cfg.causal
+          and x.shape[1] % q_chunks == 0):
+        # chunked causal prefill: chunk i attends to keys [0, (i+1)*S/n)
+        S = x.shape[1]
+        cs = S // q_chunks
+        outs = []
+        for i in range(q_chunks):
+            hi = (i + 1) * cs
+            outs.append(attention_scores(
+                q[:, i * cs:hi], kk[:, :hi], vv[:, :hi],
+                q_pos[..., i * cs:hi], k_pos[..., :hi],
+                causal=True, window=window, kv_groups=H // KV))
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        out = attention_scores(q, kk, vv, q_pos, k_pos,
+                               causal=cfg.causal or kv_cache is not None,
+                               window=window, kv_groups=H // KV)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(ks[0], (d_model, d_ff)),
+        "w3": dense_init(ks[1], (d_model, d_ff)),
+        "w2": dense_init(ks[2], (d_ff, d_model), in_axis_size=d_ff),
+    }
+
+
+def mlp(p, x):
+    dt = x.dtype
+    h = jax.nn.silu(x @ p["w1"].astype(dt)) * (x @ p["w3"].astype(dt))
+    return h @ p["w2"].astype(dt)
+
+
+# --------------------------------------------------------------------------
+# embeddings / head
+# --------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    p = {"embedding": embed_init(ks[0], (cfg.vocab_size, cfg.d_model))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size))
+    return p
+
+
+def embed(p, cfg: ModelConfig, tokens, dtype):
+    return p["embedding"].astype(dtype)[tokens]
+
+
+def unembed(p, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        return x @ p["embedding"].astype(x.dtype).T
+    return x @ p["unembed"].astype(x.dtype)

@@ -1,0 +1,138 @@
+"""Mamba2 (SSD) block and the Zamba2 hybrid wiring [arXiv:2411.15242].
+
+Mamba2 block: in_proj -> (z | x | B | C | dt), causal depthwise conv over
+(x,B,C), SSD linear recurrence with scalar-per-head decay
+``a_t = exp(-softplus(dt_t + dt_bias) * exp(A_log))``, D skip, silu(z) gating,
+RMSNorm, out_proj.  The SSD scan maps onto ``repro.models.scan_ops`` with
+r=C, k=dt*B, v=x_heads (include_current=True).
+
+Zamba2: 54 Mamba2 layers with one *shared* attention(+MLP) block applied every
+``attn_every`` layers (identical weights each invocation) — implemented as a
+two-level scan (groups x layers-per-group) so HLO stays compact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import scan_ops
+
+CONV_K = 4           # depthwise conv kernel size
+N_GROUPS = 1         # B/C groups
+
+
+def _dims(cfg: ModelConfig):
+    H = cfg.ssm_heads
+    hd = cfg.ssm_head_dim or (cfg.d_model // H)
+    d_inner = H * hd
+    N = cfg.ssm_state
+    return H, hd, d_inner, N
+
+
+def init_layer(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H, hd, d_inner, N = _dims(cfg)
+    conv_dim = d_inner + 2 * N_GROUPS * N
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": jnp.ones((d,)),
+        "in_proj": L.dense_init(ks[0], (d, 2 * d_inner + 2 * N_GROUPS * N + H)),
+        "conv_w": L.dense_init(ks[1], (CONV_K, conv_dim), in_axis_size=CONV_K),
+        "conv_b": jnp.zeros((conv_dim,)),
+        "A_log": jnp.zeros((H,)),                 # A = -exp(A_log) ~ -1
+        "D": jnp.ones((H,)),
+        "dt_bias": jnp.full((H,), -2.0),          # softplus^-1-ish small dt
+        "out_norm": jnp.ones((d_inner,)),
+        "out_proj": L.dense_init(ks[2], (d_inner, d), in_axis_size=d_inner),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    H, hd, d_inner, N = _dims(cfg)
+    z, xc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N_GROUPS * N], axis=-1)
+    return z, xc, dt      # xc = conv input (x | B | C)
+
+
+def _causal_conv(xc, w, b, conv_state=None):
+    """Depthwise causal conv, kernel CONV_K. xc: (B,S,C).
+    Returns (out, new_conv_state (B, CONV_K-1, C))."""
+    Bsz, S, C = xc.shape
+    pad = conv_state if conv_state is not None else jnp.zeros(
+        (Bsz, CONV_K - 1, C), xc.dtype)
+    xp = jnp.concatenate([pad.astype(xc.dtype), xc], axis=1)     # (B, S+K-1, C)
+    out = sum(xp[:, i:i + S] * w[i].astype(xc.dtype) for i in range(CONV_K))
+    out = jax.nn.silu(out + b.astype(xc.dtype))
+    new_state = xp[:, -(CONV_K - 1):] if CONV_K > 1 else pad
+    return out, new_state
+
+
+def block(p, cfg: ModelConfig, x, state, *, impl="jnp"):
+    """One Mamba2 layer. state = dict(conv (B,K-1,C), ssm (B,H,N,hd) f32).
+    Returns (x_out, new_state)."""
+    Bsz, S, d = x.shape
+    H, hd, d_inner, N = _dims(cfg)
+    dt_ = x.dtype
+    h = L.rms_norm(x, p["ln"])
+    z, xc, dt_raw = _split_proj(cfg, h @ p["in_proj"].astype(dt_))
+    xc, conv_state = _causal_conv(xc, p["conv_w"], p["conv_b"], state["conv"])
+    xs, B_, C_ = jnp.split(xc, [d_inner, d_inner + N_GROUPS * N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))      # (B,S,H)
+    log_decay = -dt * jnp.exp(p["A_log"].astype(jnp.float32))     # (B,S,H)
+
+    v = xs.reshape(Bsz, S, H, hd)
+    k = jnp.broadcast_to(B_.reshape(Bsz, S, N_GROUPS, N),
+                         (Bsz, S, H, N)) * dt[..., None].astype(dt_)
+    r = jnp.broadcast_to(C_.reshape(Bsz, S, N_GROUPS, N), (Bsz, S, H, N))
+
+    if S > 1:
+        y, ssm = scan_ops.chunked_scan(r, k, v, log_decay, state["ssm"],
+                                       include_current=True,
+                                       chunk=min(cfg.chunk_size, S), impl=impl)
+    else:
+        y1, ssm = scan_ops.recurrent_step(r[:, 0], k[:, 0], v[:, 0],
+                                          log_decay[:, 0], state["ssm"],
+                                          include_current=True)
+        y = y1[:, None]
+
+    y = y + v * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner) * jax.nn.silu(z)
+    y = L.rms_norm(y, p["out_norm"])
+    out = y @ p["out_proj"].astype(dt_)
+    return x + out, {"conv": conv_state, "ssm": ssm}
+
+
+def init_state(cfg: ModelConfig, num_layers: int, batch: int, dtype):
+    H, hd, d_inner, N = _dims(cfg)
+    conv_dim = d_inner + 2 * N_GROUPS * N
+    return {
+        "conv": jnp.zeros((num_layers, batch, CONV_K - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((num_layers, batch, H, N, hd), jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# shared attention block (zamba2)
+# --------------------------------------------------------------------------
+
+def init_shared_attn(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln_a": jnp.ones((cfg.d_model,)),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln_m": jnp.ones((cfg.d_model,)),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff),
+    }
+
+
+def shared_attn_block(p, cfg: ModelConfig, x, positions, kv_cache=None, *,
+                      window: int = 0):
+    h = L.rms_norm(x, p["ln_a"])
+    att, new_cache = L.attention(p["attn"], cfg, h, positions, kv_cache,
+                                 window=window)
+    x = x + att
+    x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln_m"]))
+    return x, new_cache

@@ -1,0 +1,233 @@
+"""Mixture-of-Experts FFN (token-choice top-k, sort-based dispatch) and
+Multi-head Latent Attention (MLA, DeepSeek-V2 style).
+
+MoE dispatch is the production sort-based formulation: assignments are sorted
+by expert id, placed into a per-expert capacity buffer ``(E, C, d)`` via
+scatter, batched expert matmuls run as a single ``ecd,edf->ecf`` einsum
+(expert axis tensor-shardable), and results are combined by weighted
+scatter-add.  Tokens beyond capacity are dropped (standard on TPU); the
+router aux loss keeps load balanced.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+CAPACITY_FACTOR = 1.25
+
+
+def moe_capacity(tokens: int, num_experts: int, top_k: int,
+                 factor: float = CAPACITY_FACTOR) -> int:
+    c = int(math.ceil(tokens * top_k * factor / num_experts))
+    return max(8, -(-c // 8) * 8)     # round up to 8 for TPU-friendly tiles
+
+
+def init_moe_ffn(key, cfg: ModelConfig):
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.dense_init(ks[0], (d, E)),
+        "we1": L.dense_init(ks[1], (E, d, f), in_axis_size=d),
+        "we3": L.dense_init(ks[2], (E, d, f), in_axis_size=d),
+        "we2": L.dense_init(ks[3], (E, f, d), in_axis_size=f),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = L.init_mlp(ks[4], d, f * cfg.num_shared_experts)
+    return p
+
+
+def moe_ffn(p, cfg: ModelConfig, x, *, capacity_factor: float = None):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    T = B * S
+    dt = x.dtype
+    xf = x.reshape(T, d)
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+
+    logits = (xf @ p["router"].astype(dt)).astype(jnp.float32)      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, k)                             # (T, k)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)                                    # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * ce)
+
+    C = moe_capacity(T, E, k, capacity_factor)
+    flat_ids = ids.reshape(-1)                                      # (T*k,)
+    sort_idx = jnp.argsort(flat_ids, stable=True)                   # (T*k,)
+    sorted_eids = flat_ids[sort_idx]
+    start = jnp.searchsorted(sorted_eids, jnp.arange(E), side="left")
+    pos_in_expert = jnp.arange(T * k) - start[sorted_eids]
+    tok = sort_idx // k                                             # source token
+    valid = pos_in_expert < C
+    dest = jnp.where(valid, sorted_eids * C + pos_in_expert, E * C)  # drop slot
+
+    buf = jnp.zeros((E * C + 1, d), dt).at[dest].set(xf[tok])
+    h = buf[: E * C].reshape(E, C, d)
+    a = jnp.einsum("ecd,edf->ecf", h, p["we1"].astype(dt))
+    b = jnp.einsum("ecd,edf->ecf", h, p["we3"].astype(dt))
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(a) * b, p["we2"].astype(dt))
+    y = y.reshape(E * C, d)
+
+    gate_sorted = gate.reshape(-1)[sort_idx].astype(dt)
+    contrib = y[jnp.where(valid, dest, 0)] * jnp.where(valid, gate_sorted, 0.0)[:, None]
+    out = jnp.zeros((T, d), dt).at[tok].add(contrib)
+
+    if "shared" in p:
+        out = out + L.mlp(p["shared"], xf)
+    return out.reshape(B, S, d), aux
+
+
+def moe_ffn_reference(p, cfg: ModelConfig, x):
+    """Oracle: per-token dense loop over all experts (tiny configs only)."""
+    B, S, d = x.shape
+    dt = x.dtype
+    xf = x.reshape(-1, d)
+    logits = (xf @ p["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, cfg.top_k)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+    # all-experts dense compute (E, T, d) — fine at smoke scale
+    a = jnp.einsum("td,edf->etf", xf, p["we1"].astype(dt))
+    b = jnp.einsum("td,edf->etf", xf, p["we3"].astype(dt))
+    y = jnp.einsum("etf,efd->etd", jax.nn.silu(a) * b, p["we2"].astype(dt))
+    onehot = jax.nn.one_hot(ids, cfg.num_experts, dtype=jnp.float32)  # (T,k,E)
+    w = jnp.einsum("tk,tke->te", gate, onehot).astype(dt)             # (T,E)
+    out = jnp.einsum("te,etd->td", w, y)
+    if "shared" in p:
+        out = out + L.mlp(p["shared"], xf)
+    return out.reshape(B, S, d)
+
+
+# ==========================================================================
+# MLA — multi-head latent attention (DeepSeek-V2)
+# ==========================================================================
+
+def init_mla(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dn, dr = cfg.nope_head_dim, cfg.rope_head_dim
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": L.dense_init(ks[0], (d, r_kv)),                 # x -> latent
+        "w_kr": L.dense_init(ks[1], (d, dr)),                    # x -> shared rope key
+        "w_uk": L.dense_init(ks[2], (r_kv, H, dn), in_axis_size=r_kv),
+        "w_uv": L.dense_init(ks[3], (r_kv, H, dn), in_axis_size=r_kv),
+        "wo": L.dense_init(ks[4], (H, dn, d), in_axis_size=H * dn),
+        "kv_norm": jnp.ones((r_kv,)),
+    }
+    if r_q:
+        p["w_dq"] = L.dense_init(ks[5], (d, r_q))
+        p["w_uq"] = L.dense_init(ks[6], (r_q, H, dn + dr), in_axis_size=r_q)
+        p["q_norm"] = jnp.ones((r_q,))
+    else:
+        p["wq"] = L.dense_init(ks[7], (d, H, dn + dr))
+    return p
+
+
+def _mla_queries(p, cfg: ModelConfig, x, positions):
+    dn, dr = cfg.nope_head_dim, cfg.rope_head_dim
+    dt = x.dtype
+    if cfg.q_lora_rank:
+        cq = L.rms_norm(x @ p["w_dq"].astype(dt), p["q_norm"])
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(p, cfg: ModelConfig, x, positions, cache=None, *, window: int = 0,
+                  q_chunks: int = 1):
+    """MLA block.  Prefill/train: expanded form.  Decode: absorbed form over a
+    latent cache of ``(c_kv, k_rope)`` — O(S·(r_kv+dr)) per step, the MLA win.
+
+    ``q_chunks > 1`` enables chunked causal prefill: query chunk i only
+    attends to keys [0, (i+1)*S/n), cutting score/AV matmul FLOPs to
+    (n+1)/2n of the full rectangle — the §Perf lever for compute-bound
+    long-prefill (structural, exact, no approximation).
+    Returns (out, new_cache_or_None)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dn, dr, r_kv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.kv_lora_rank
+    dt = x.dtype
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    if cache is not None and positions is None:
+        positions = jnp.broadcast_to(cache["index"][None, None], (B, S))
+    q_nope, q_rope = _mla_queries(p, cfg, x, positions)
+    c_kv = L.rms_norm(x @ p["w_dkv"].astype(dt), p["kv_norm"])      # (B,S,r_kv)
+    k_rope = L.apply_rope(x @ p["w_kr"].astype(dt), positions, cfg.rope_theta)
+
+    if cache is None:
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"].astype(dt))
+        v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"].astype(dt))
+
+        def attend(qn, qr, qpos, kn, kr, kpos):
+            scores = (jnp.einsum("bqhk,bshk->bhqs", qn, kn)
+                      + jnp.einsum("bqhk,bsk->bhqs", qr, kr))
+            scores = scores.astype(jnp.float32) * scale
+            bias = L._mask_bias(qpos, kpos, True, window, jnp.float32)
+            scores = scores + bias.reshape(
+                bias.shape[:-2] + (1,) * (scores.ndim - bias.ndim) + bias.shape[-2:])
+            probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+            return probs
+
+        if q_chunks > 1 and S % q_chunks == 0:
+            cs = S // q_chunks
+            outs = []
+            for i in range(q_chunks):
+                hi = (i + 1) * cs
+                probs = attend(q_nope[:, i * cs:hi], q_rope[:, i * cs:hi],
+                               positions[..., i * cs:hi],
+                               k_nope[:, :hi], k_rope[:, :hi],
+                               positions[..., :hi])
+                outs.append(jnp.einsum("bhqs,bshk->bqhk", probs, v[:, :hi]))
+            out = jnp.concatenate(outs, axis=1)
+        else:
+            probs = attend(q_nope, q_rope, positions, k_nope, k_rope, positions)
+            out = jnp.einsum("bhqs,bshk->bqhk", probs, v)
+        new_cache = None
+    else:
+        # ---- absorbed decode: scores via latent, never expand K/V ----------
+        cache_len = cache["c_kv"].shape[1]
+        idx = cache["index"]
+        slot = jnp.mod(idx, cache_len)
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, slot, 0))
+        kr_c = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, slot, 0))
+        new_cache = {"c_kv": ckv_c, "k_rope": kr_c, "index": idx + 1}
+
+        slots = jnp.arange(cache_len)
+        written = jnp.minimum(idx + 1, cache_len)
+        age = jnp.mod(slot - slots, cache_len)
+        k_pos = jnp.where(age < written, idx - age, 10**9)
+        k_pos = jnp.broadcast_to(k_pos, (B, cache_len))
+        q_pos = jnp.broadcast_to(jnp.asarray(idx)[None], (B, 1))
+
+        # absorb: q_lat = q_nope @ W_uk  -> (B,1,H,r_kv)
+        q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["w_uk"].astype(dt))
+        scores = (jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv_c.astype(dt))
+                  + jnp.einsum("bqhk,bsk->bhqs", q_rope, kr_c.astype(dt)))
+        scores = scores.astype(jnp.float32) * scale
+        bias = L._mask_bias(q_pos, k_pos, True, window, jnp.float32)
+        scores = scores + bias[:, None]
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        out_lat = jnp.einsum("bhqs,bsr->bqhr", probs, ckv_c.astype(dt))
+        out = jnp.einsum("bqhr,rhk->bqhk", out_lat, p["w_uv"].astype(dt))
+
+    out = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt))
+    return out, new_cache

@@ -1,0 +1,217 @@
+"""Unified model API over every assigned architecture family.
+
+    init_params(key, cfg)                        -> params pytree
+    apply(params, cfg, batch, ...)               -> (logits, aux)     # train/prefill
+    init_cache(cfg, batch, cache_len, dtype)     -> cache pytree      # decode
+    decode_step(params, cfg, cache, tokens, ...) -> (logits, cache)
+    train_loss(params, cfg, batch, ...)          -> (loss, metrics)
+    analytic_param_count(cfg, active_only)       -> int
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as MB
+from repro.models import rwkv as RW
+from repro.models import transformer as TF
+
+MOE_AUX_WEIGHT = 0.01
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    if cfg.family == "ssm":
+        ks = jax.random.split(key, 3)
+        return {
+            "embed": L.init_embedding(ks[0], cfg),
+            "final_norm": jnp.ones((cfg.d_model,)),
+            "layers": TF._stacked_init(
+                functools.partial(RW.init_layer, cfg=cfg), ks[1], cfg.num_layers),
+        }
+    if cfg.family == "hybrid":
+        G = cfg.num_layers // cfg.attn_every
+        ks = jax.random.split(key, 4)
+        mamba_keys = jax.random.split(ks[1], G * cfg.attn_every)
+        stacked = jax.vmap(lambda k: MB.init_layer(k, cfg))(mamba_keys)
+        stacked = jax.tree.map(
+            lambda a: a.reshape((G, cfg.attn_every) + a.shape[1:]), stacked)
+        return {
+            "embed": L.init_embedding(ks[0], cfg),
+            "final_norm": jnp.ones((cfg.d_model,)),
+            "mamba": stacked,
+            "shared": MB.init_shared_attn(ks[2], cfg),
+        }
+    return TF.init_params(key, cfg)
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def apply(params, cfg: ModelConfig, batch, *, window: int = 0, impl: str = "xla",
+          q_chunks: int = 1):
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.family == "ssm":
+        x, _ = TF._embed_inputs(params, cfg, batch, dtype)
+        B, S = x.shape[:2]
+        state = RW.init_state(cfg, B, dtype)
+        scan_impl = "jnp" if impl == "xla" else impl
+
+        def body(x, inp):
+            lp, st = inp
+            x, st2 = RW.block(lp, cfg, x, st, impl=scan_impl)
+            return x, st2
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, (params["layers"], state))
+        x = L.rms_norm(x, params["final_norm"])
+        return L.unembed(params["embed"], cfg, x), jnp.zeros((), jnp.float32)
+
+    if cfg.family == "hybrid":
+        x, positions = TF._embed_inputs(params, cfg, batch, dtype)
+        B, S = x.shape[:2]
+        G = cfg.num_layers // cfg.attn_every
+        state = MB.init_state(cfg, cfg.num_layers, B, dtype)
+        state = jax.tree.map(
+            lambda a: a.reshape((G, cfg.attn_every) + a.shape[1:]), state)
+        shared = params["shared"]
+
+        def group_body(x, inp):
+            mp_g, st_g = inp
+            x, _ = MB.shared_attn_block(shared, cfg, x, positions, None,
+                                        window=window)
+
+            def mamba_body(x, inp2):
+                lp, st = inp2
+                x, st2 = MB.block(lp, cfg, x, st,
+                                  impl="jnp" if impl == "xla" else impl)
+                return x, st2
+            x, st2 = jax.lax.scan(mamba_body, x, (mp_g, st_g))
+            return x, st2
+        if cfg.remat:
+            group_body = jax.checkpoint(group_body, prevent_cse=False)
+        x, _ = jax.lax.scan(group_body, x, (params["mamba"], state))
+        x = L.rms_norm(x, params["final_norm"])
+        return L.unembed(params["embed"], cfg, x), jnp.zeros((), jnp.float32)
+
+    return TF.forward(params, cfg, batch, window=window, impl=impl,
+                      q_chunks=q_chunks)
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    if cfg.family == "ssm":
+        return RW.init_state(cfg, batch, dtype)
+    if cfg.family == "hybrid":
+        G = cfg.num_layers // cfg.attn_every
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        st = MB.init_state(cfg, cfg.num_layers, batch, dtype)
+        st = jax.tree.map(lambda a: a.reshape((G, cfg.attn_every) + a.shape[1:]), st)
+        return {
+            "mamba": st,
+            "attn_k": jnp.zeros((G, batch, cache_len, KV, hd), dtype),
+            "attn_v": jnp.zeros((G, batch, cache_len, KV, hd), dtype),
+            "index": jnp.zeros((), jnp.int32),
+        }
+    return TF.init_cache(cfg, batch, cache_len, dtype)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, *, window: int = 0):
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.family == "ssm":
+        x = L.embed(params["embed"], cfg, tokens, dtype)
+
+        def body(x, inp):
+            lp, st = inp
+            x, st2 = RW.block(lp, cfg, x, st)
+            return x, st2
+        x, new_state = jax.lax.scan(body, x, (params["layers"], cache))
+        x = L.rms_norm(x, params["final_norm"])
+        return L.unembed(params["embed"], cfg, x), new_state
+
+    if cfg.family == "hybrid":
+        x = L.embed(params["embed"], cfg, tokens, dtype)
+        idx = cache["index"]
+        shared = params["shared"]
+
+        def group_body(x, inp):
+            mp_g, st_g, kc, vc = inp
+            attn_cache = {"k": kc, "v": vc, "index": idx}
+            x, new_attn = MB.shared_attn_block(shared, cfg, x, None, attn_cache,
+                                               window=window)
+
+            def mamba_body(x, inp2):
+                lp, st = inp2
+                x, st2 = MB.block(lp, cfg, x, st)
+                return x, st2
+            x, st2 = jax.lax.scan(mamba_body, x, (mp_g, st_g))
+            return x, (st2, new_attn["k"], new_attn["v"])
+        x, (new_st, new_k, new_v) = jax.lax.scan(
+            group_body, x, (params["mamba"], cache["mamba"],
+                            cache["attn_k"], cache["attn_v"]))
+        x = L.rms_norm(x, params["final_norm"])
+        new_cache = {"mamba": new_st, "attn_k": new_k, "attn_v": new_v,
+                     "index": idx + 1}
+        return L.unembed(params["embed"], cfg, x), new_cache
+
+    return TF.decode_step(params, cfg, cache, tokens, window=window)
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+def _ce(logits, labels, mask=None):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.clip(mask.sum(), 1.0)
+
+
+def train_loss(params, cfg: ModelConfig, batch, *, window: int = 0,
+               impl: str = "xla", q_chunks: int = 1):
+    logits, aux = apply(params, cfg, batch, window=window, impl=impl,
+                        q_chunks=q_chunks)
+    if cfg.family == "audio":
+        loss = _ce(logits, batch["labels"], batch.get("mask"))
+    elif cfg.family == "vlm":
+        P = batch["prefix_embeds"].shape[1]
+        text_logits = logits[:, P:]
+        loss = _ce(text_logits[:, :-1], batch["tokens"][:, 1:])
+    else:
+        loss = _ce(logits[:, :-1], batch["tokens"][:, 1:])
+    total = loss + MOE_AUX_WEIGHT * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# parameter counting (exact, via eval_shape — no allocation)
+# --------------------------------------------------------------------------
+
+def _count(cfg: ModelConfig) -> int:
+    import math
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree_util.tree_leaves(shapes))
+
+
+def analytic_param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    if active_only and cfg.is_moe:
+        cfg = cfg.replace(num_experts=cfg.top_k)
+    return _count(cfg)

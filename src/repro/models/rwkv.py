@@ -1,0 +1,135 @@
+"""RWKV6 ("Finch") — attention-free with data-dependent decay [arXiv:2404.05892].
+
+Per layer: a time-mix block (token-shift interpolation with LoRA-produced
+data-dependent mixing coefficients, data-dependent per-channel decay
+``w = exp(-exp(w0 + lora(x)))``, WKV linear recurrence with bonus ``u``) and a
+channel-mix block (squared-ReLU FFN with receptance gate).
+
+Deviation noted in DESIGN.md: we use RMSNorm where upstream uses LayerNorm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import scan_ops
+
+TM_LORA = 32     # time-mix lora rank (5 heads of it)
+TD_LORA = 64     # decay lora rank
+
+
+def init_layer(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.ssm_heads
+    hd = d // H
+    ks = jax.random.split(key, 16)
+    return {
+        "ln1": jnp.ones((d,)), "ln2": jnp.ones((d,)),
+        # token-shift mixing
+        "mu_base": jnp.zeros((d,)),
+        "mu": jnp.zeros((5, d)),
+        "tm_w1": L.dense_init(ks[0], (d, 5 * TM_LORA)),
+        "tm_w2": L.dense_init(ks[1], (5, TM_LORA, d), in_axis_size=TM_LORA),
+        # data-dependent decay
+        "w0": jnp.full((d,), -0.6931),          # exp(-exp(w0)) ~ 0.5 halflife-ish
+        "td_w1": L.dense_init(ks[2], (d, TD_LORA)),
+        "td_w2": L.dense_init(ks[3], (TD_LORA, d), in_axis_size=TD_LORA),
+        # projections
+        "tm_wr": L.dense_init(ks[4], (d, d)),
+        "tm_wk": L.dense_init(ks[5], (d, d)),
+        "tm_wv": L.dense_init(ks[6], (d, d)),
+        "tm_wg": L.dense_init(ks[7], (d, d)),
+        "tm_wo": L.dense_init(ks[8], (d, d)),
+        "u": jnp.zeros((H, hd)),                 # bonus ("time_faaaa")
+        "gn_scale": jnp.ones((d,)), "gn_bias": jnp.zeros((d,)),
+        # channel mix
+        "cm_mu_r": jnp.zeros((d,)), "cm_mu_k": jnp.zeros((d,)),
+        "cm_wr": L.dense_init(ks[9], (d, d)),
+        "cm_wk": L.dense_init(ks[10], (d, cfg.d_ff)),
+        "cm_wv": L.dense_init(ks[11], (cfg.d_ff, d), in_axis_size=cfg.d_ff),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1}, with ``prev`` (B,d) as the t=-1 value."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def time_mix(p, cfg: ModelConfig, x, prev_x, wkv_state, *, chunked=True,
+             impl="jnp"):
+    """x: (B,S,d). Returns (out, last_x (B,d), new_wkv_state)."""
+    B, S, d = x.shape
+    H = cfg.ssm_heads
+    hd = d // H
+    dt = x.dtype
+
+    xs = _shift(x, prev_x)
+    dx = xs - x
+    xxx = x + dx * p["mu_base"].astype(dt)
+    lora = jnp.tanh(xxx @ p["tm_w1"].astype(dt)).reshape(B, S, 5, TM_LORA)
+    offs = jnp.einsum("bsfr,frd->fbsd", lora, p["tm_w2"].astype(dt))   # (5,B,S,d)
+    mixed = x[None] + dx[None] * (p["mu"].astype(dt)[:, None, None] + offs)
+    xw, xk, xv, xr, xg = mixed
+
+    ww = p["w0"].astype(jnp.float32) + (jnp.tanh(xw @ p["td_w1"].astype(dt))
+                                        @ p["td_w2"].astype(dt)).astype(jnp.float32)
+    log_decay = -jnp.exp(ww)                                           # (B,S,d) <= 0
+
+    r = (xr @ p["tm_wr"].astype(dt)).reshape(B, S, H, hd)
+    k = (xk @ p["tm_wk"].astype(dt)).reshape(B, S, H, hd)
+    v = (xv @ p["tm_wv"].astype(dt)).reshape(B, S, H, hd)
+    g = xg @ p["tm_wg"].astype(dt)
+    ld = log_decay.reshape(B, S, H, hd)
+
+    scan = scan_ops.chunked_scan if chunked else scan_ops.recurrent_scan
+    kw = dict(include_current=False, bonus=p["u"])
+    if chunked:
+        kw.update(chunk=min(cfg.chunk_size, S), impl=impl)
+    y, new_state = scan(r, k, v, ld, wkv_state, **kw)
+
+    y = L.group_norm_heads(y, p["gn_scale"].reshape(H, hd), p["gn_bias"].reshape(H, hd))
+    y = y.reshape(B, S, d) * jax.nn.silu(g)
+    return y @ p["tm_wo"].astype(dt), x[:, -1], new_state
+
+
+def time_mix_step(p, cfg: ModelConfig, x, prev_x, wkv_state):
+    """Single-token decode. x: (B,1,d)."""
+    y, last_x, st = time_mix(p, cfg, x, prev_x, wkv_state, chunked=False)
+    return y, last_x, st
+
+
+def channel_mix(p, x, prev_x):
+    dt = x.dtype
+    xs = _shift(x, prev_x)
+    dx = xs - x
+    xr = x + dx * p["cm_mu_r"].astype(dt)
+    xk = x + dx * p["cm_mu_k"].astype(dt)
+    h = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(dt)))
+    out = jax.nn.sigmoid(xr @ p["cm_wr"].astype(dt)) * (h @ p["cm_wv"].astype(dt))
+    return out, x[:, -1]
+
+
+def block(p, cfg: ModelConfig, x, state, *, impl="jnp"):
+    """One RWKV layer. state = dict(tm_x, cm_x, wkv). Returns (x, new_state)."""
+    h = L.rms_norm(x, p["ln1"])
+    att, tm_x, wkv = time_mix(p, cfg, h, state["tm_x"], state["wkv"],
+                              chunked=x.shape[1] > 1, impl=impl)
+    x = x + att
+    h = L.rms_norm(x, p["ln2"])
+    ffn, cm_x = channel_mix(p, h, state["cm_x"])
+    x = x + ffn
+    return x, {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv}
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    H = cfg.ssm_heads
+    hd = d // H
+    Lr = cfg.num_layers
+    return {
+        "tm_x": jnp.zeros((Lr, batch, d), dtype),
+        "cm_x": jnp.zeros((Lr, batch, d), dtype),
+        "wkv": jnp.zeros((Lr, batch, H, hd, hd), jnp.float32),
+    }

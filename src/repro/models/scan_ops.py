@@ -1,0 +1,138 @@
+"""Chunked linear-recurrence scan — the shared math under RWKV6 (vector,
+per-channel decay) and Mamba2/SSD (scalar, per-head decay).
+
+Recurrence (per batch b, head h):
+    S_t = diag(exp(ld_t)) . S_{t-1} + k_t v_t^T          S in R^{K x V}
+    y_t = r_t . (S_t)                        if include_current (Mamba2/SSD)
+    y_t = r_t . (S_{t-1}) + (r_t*bonus . k_t) v_t         else (RWKV6 w/ u)
+
+The chunked form computes, per chunk of length Lc with L = cumsum(ld):
+    carry   : y_cross = (r * exp(M)) @ S_in
+    intra   : A[t,s]  = (r_t * exp(M_t)) . (k_s * exp(-L_s)),  masked s<t|s<=t
+    update  : S_out   = exp(L_end) * S_in + sum_s exp(L_end - L_s) k_s v_s^T
+
+where M_t = L_t (include_current) or L_{t-1} (not).  exp(M) <= 1 always; the
+exp(-L_s) factor is bounded by exp(|ld|·Lc), so per-step log-decay is clamped
+to ``>= -LOG_DECAY_CLAMP`` (documented deviation; data-dependent decays in
+trained RWKV6 models live near 0 so the clamp is rarely active).
+
+All exponentials run in f32; inputs/outputs keep their dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+LOG_DECAY_CLAMP = 1.0   # per-step |log decay| cap for the factorized form
+
+
+def _prep_decay(log_decay, K):
+    """Broadcast scalar-per-head decay (B,T,H) to (B,T,H,K); clamp."""
+    ld = log_decay.astype(jnp.float32)
+    if ld.ndim == 3:
+        ld = ld[..., None]
+    ld = jnp.broadcast_to(ld, ld.shape[:-1] + (K,))
+    return jnp.clip(ld, -LOG_DECAY_CLAMP, 0.0)
+
+
+def recurrent_scan(r, k, v, log_decay, state0=None, *, include_current=True,
+                   bonus=None):
+    """Oracle: plain sequential lax.scan over time.  Shapes:
+    r, k: (B,T,H,K); v: (B,T,H,V); log_decay: (B,T,H,K) or (B,T,H).
+    Returns (y (B,T,H,V), final_state (B,H,K,V))."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    ld = _prep_decay(log_decay, K)
+    f32 = jnp.float32
+    S0 = jnp.zeros((B, H, K, V), f32) if state0 is None else state0.astype(f32)
+
+    def step(S, inp):
+        rt, kt, vt, ldt = inp                       # (B,H,K/V)
+        rt, kt, vt = rt.astype(f32), kt.astype(f32), vt.astype(f32)
+        decayed = jnp.exp(ldt)[..., None] * S       # (B,H,K,V)
+        kv = kt[..., None] * vt[..., None, :]
+        S_new = decayed + kv
+        if include_current:
+            y = jnp.einsum("bhk,bhkv->bhv", rt, S_new)
+        else:
+            y = jnp.einsum("bhk,bhkv->bhv", rt, S)
+            y = y + jnp.einsum("bhk,bhk->bh", rt * bonus.astype(f32), kt)[..., None] * vt
+        return S_new, y
+
+    xs = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(ld, 1, 0))
+    S_fin, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(v.dtype), S_fin
+
+
+def chunked_scan(r, k, v, log_decay, state0=None, *, include_current=True,
+                 bonus=None, chunk=64, impl: str = "jnp"):
+    """Chunk-parallel scan. Same contract as :func:`recurrent_scan`.
+
+    ``impl='pallas'`` routes the per-chunk compute through the Pallas kernel
+    (`repro.kernels.chunk_scan`) — interpret mode on CPU.
+    """
+    if impl == "pallas":
+        from repro.kernels.chunk_scan import ops as cs_ops
+        return cs_ops.chunk_scan(r, k, v, log_decay, state0,
+                                 include_current=include_current,
+                                 bonus=bonus, chunk=chunk)
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc, Lc = T // chunk, chunk
+    f32 = jnp.float32
+    ld = _prep_decay(log_decay, K)
+
+    def to_chunks(x):                # (B,T,...) -> (nc, B, Lc, ...)
+        x = x.reshape((B, nc, Lc) + x.shape[2:])
+        return jnp.moveaxis(x, 1, 0)
+
+    rc, kc, vc, ldc = map(to_chunks, (r, k, v, ld))
+    S0 = jnp.zeros((B, H, K, V), f32) if state0 is None else state0.astype(f32)
+
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool), 0 if include_current else -1)
+
+    def chunk_step(S, inp):
+        rq, kq, vq, ldq = inp                       # (B,Lc,H,·)
+        rq, kq, vq = rq.astype(f32), kq.astype(f32), vq.astype(f32)
+        L = jnp.cumsum(ldq, axis=1)                 # (B,Lc,H,K) inclusive
+        M = L if include_current else jnp.pad(L, ((0, 0), (1, 0), (0, 0), (0, 0)))[:, :-1]
+        L_end = L[:, -1]                            # (B,H,K)
+
+        q_t = rq * jnp.exp(M)                       # bounded by |r|
+        k_t = kq * jnp.exp(-L)                      # bounded by exp(clamp*Lc)
+        y_cross = jnp.einsum("blhk,bhkv->blhv", q_t, S)
+        A = jnp.einsum("blhk,bshk->bhls", q_t, k_t)
+        A = jnp.where(tri[None, None], A, 0.0)
+        y_intra = jnp.einsum("bhls,bshv->blhv", A, vq)
+        y = y_cross + y_intra
+        if not include_current:
+            diag = jnp.einsum("blhk,blhk->blh", rq * bonus.astype(f32), kq)
+            y = y + diag[..., None] * vq
+        k_carry = kq * jnp.exp(L_end[:, None] - L)
+        S_new = (jnp.exp(L_end)[..., None] * S
+                 + jnp.einsum("blhk,blhv->bhkv", k_carry, vq))
+        return S_new, y
+
+    S_fin, ys = jax.lax.scan(chunk_step, S0, (rc, kc, vc, ldc))
+    ys = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, V)
+    return ys.astype(v.dtype), S_fin
+
+
+def recurrent_step(r, k, v, log_decay, state, *, include_current=True, bonus=None):
+    """Single decode step. r,k:(B,H,K) v:(B,H,V) state:(B,H,K,V) f32."""
+    f32 = jnp.float32
+    K = r.shape[-1]
+    ld = _prep_decay(log_decay[:, None], K)[:, 0]    # add/strip a time axis
+    r32, k32, v32 = r.astype(f32), k.astype(f32), v.astype(f32)
+    kv = k32[..., None] * v32[..., None, :]
+    S_new = jnp.exp(ld)[..., None] * state + kv
+    if include_current:
+        y = jnp.einsum("bhk,bhkv->bhv", r32, S_new)
+    else:
+        y = jnp.einsum("bhk,bhkv->bhv", r32, state)
+        y = y + jnp.einsum("bhk,bhk->bh", r32 * bonus.astype(f32), k32)[..., None] * v32
+    return y.astype(v.dtype), S_new

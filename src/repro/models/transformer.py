@@ -1,0 +1,180 @@
+"""Decoder/encoder transformer assembly with scan-over-layers.
+
+Covers families: dense (llama/qwen/granite/starcoder), moe (+MLA for
+DeepSeek-V2), vlm (prefix patch embeddings), audio (bidirectional encoder,
+masked prediction).  SSM/hybrid live in rwkv.py / mamba.py and are assembled
+in registry.py.
+
+All layer stacks are ``jax.lax.scan`` over stacked params (leading ``L``
+axis) with optional remat — this keeps HLO size and compile time O(1) in
+depth, which matters for the 512-device dry-run on a CPU host.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+
+MAX_POS_EMBED = 32768     # learned abs-pos table for non-RoPE encoders
+
+
+def _stacked_init(fn, key, n, *args):
+    return jax.vmap(lambda k: fn(k, *args))(jax.random.split(key, n))
+
+
+def init_layer(key, cfg: ModelConfig, *, moe_layer: bool):
+    ks = jax.random.split(key, 3)
+    p = {"ln1": jnp.ones((cfg.d_model,)), "ln2": jnp.ones((cfg.d_model,))}
+    if cfg.use_mla:
+        p["attn"] = MOE.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = L.init_attention(ks[0], cfg)
+    if moe_layer:
+        p["ffn"] = MOE.init_moe_ffn(ks[1], cfg)
+    else:
+        p["ffn"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p = {"embed": L.init_embedding(ks[0], cfg),
+         "final_norm": jnp.ones((cfg.d_model,))}
+    n_lead = cfg.first_dense_layers if cfg.is_moe else 0
+    n_scan = cfg.num_layers - n_lead
+    if n_lead:
+        p["lead_layers"] = _stacked_init(
+            functools.partial(init_layer, cfg=cfg, moe_layer=False), ks[1], n_lead)
+    p["layers"] = _stacked_init(
+        functools.partial(init_layer, cfg=cfg, moe_layer=cfg.is_moe), ks[2], n_scan)
+    if not cfg.use_rope and cfg.is_encoder_only:
+        p["pos_embed"] = L.embed_init(ks[3], (MAX_POS_EMBED, cfg.d_model))
+    return p
+
+
+def _layer_apply(lp, cfg: ModelConfig, x, positions, cache, *, moe_layer: bool,
+                 window: int, impl: str, q_chunks: int = 1):
+    h = L.rms_norm(x, lp["ln1"])
+    if cfg.use_mla:
+        att, new_cache = MOE.mla_attention(lp["attn"], cfg, h, positions, cache,
+                                           window=window, q_chunks=q_chunks)
+    else:
+        att, new_cache = L.attention(lp["attn"], cfg, h, positions, cache,
+                                     window=window, impl=impl,
+                                     q_chunks=q_chunks)
+    x = x + att
+    h = L.rms_norm(x, lp["ln2"])
+    if moe_layer:
+        f, aux = MOE.moe_ffn(lp["ffn"], cfg, h)
+    else:
+        f, aux = L.mlp(lp["ffn"], h), jnp.zeros((), jnp.float32)
+    return x + f, new_cache, aux
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch, dtype):
+    """Returns (x (B,S,d), positions (B,S))."""
+    if cfg.frontend == "audio_stub":
+        x = batch["frame_embeds"].astype(dtype)      # conv frontend is a stub
+    else:
+        x = L.embed(params["embed"], cfg, batch["tokens"], dtype)
+        if cfg.frontend == "vision_stub" and "prefix_embeds" in batch:
+            x = jnp.concatenate([batch["prefix_embeds"].astype(dtype), x], axis=1)
+    B, S = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if "pos_embed" in params:
+        x = x + params["pos_embed"].astype(dtype)[positions]
+    return x, positions
+
+
+def forward(params, cfg: ModelConfig, batch, *, window: int = 0,
+            impl: str = "xla", q_chunks: int = 1):
+    """Full-sequence forward (train / prefill without cache).
+    Returns (logits (B,S,V), aux_loss)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x, positions = _embed_inputs(params, cfg, batch, dtype)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def make_body(moe_layer):
+        def body(x, lp):
+            x, _, aux = _layer_apply(lp, cfg, x, positions, None,
+                                     moe_layer=moe_layer, window=window,
+                                     impl=impl, q_chunks=q_chunks)
+            return x, aux
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        return body
+
+    if "lead_layers" in params:
+        x, auxs = jax.lax.scan(make_body(False), x, params["lead_layers"])
+        aux_total = aux_total + auxs.sum()
+    x, auxs = jax.lax.scan(make_body(cfg.is_moe), x, params["layers"])
+    aux_total = aux_total + auxs.sum()
+
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits, aux_total
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    """Stacked per-layer decode cache."""
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    Lr = cfg.num_layers
+    if cfg.use_mla:
+        return {
+            "c_kv": jnp.zeros((Lr, batch, cache_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((Lr, batch, cache_len, cfg.rope_head_dim), dtype),
+            "index": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((Lr, batch, cache_len, KV, hd), dtype),
+        "v": jnp.zeros((Lr, batch, cache_len, KV, hd), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def _split_cache(cache):
+    idx = cache["index"]
+    leaves = {k: v for k, v in cache.items() if k != "index"}
+    return leaves, idx
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, *, window: int = 0):
+    """One decode step. tokens: (B,1). Returns (logits (B,1,V), new_cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], cfg, tokens, dtype)
+    leaves, idx = _split_cache(cache)
+    positions = None   # per-layer attention derives positions from the index
+
+    def body(x, inp):
+        lp, cache_l = inp
+        cache_l = dict(cache_l, index=idx)
+        x, new_cache, _ = _layer_apply(
+            lp, cfg, x, positions, cache_l,
+            moe_layer=("router" in lp.get("ffn", {})), window=window, impl="xla")
+        new_leaves = {k: v for k, v in new_cache.items() if k != "index"}
+        return x, new_leaves
+
+    if "lead_layers" in params:
+        n_lead = jax.tree_util.tree_leaves(params["lead_layers"])[0].shape[0]
+        lead_leaves = {k: v[:n_lead] for k, v in leaves.items()}
+        rest_leaves = {k: v[n_lead:] for k, v in leaves.items()}
+        x, new_lead = jax.lax.scan(body, x, (params["lead_layers"], lead_leaves))
+        x, new_rest = jax.lax.scan(body, x, (params["layers"], rest_leaves))
+        new_leaves = {k: jnp.concatenate([new_lead[k], new_rest[k]], axis=0)
+                      for k in new_lead}
+    else:
+        x, new_leaves = jax.lax.scan(body, x, (params["layers"], leaves))
+
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed(params["embed"], cfg, x)
+    new_cache = dict(new_leaves, index=idx + 1)
+    return logits, new_cache

@@ -1,0 +1,7 @@
+"""Pure-JAX pytree optimizers (no optax in this container)."""
+from repro.optim.optimizers import (
+    Optimizer, sgd, adamw, apply_updates, global_norm, clip_by_global_norm,
+)
+
+__all__ = ["Optimizer", "sgd", "adamw", "apply_updates", "global_norm",
+           "clip_by_global_norm"]

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests see the host's real single device — the 512-device flag is set ONLY
+# inside launch/dryrun.py (its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks pkg

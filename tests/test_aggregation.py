@@ -1,0 +1,97 @@
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (SatelliteMeta, asyncfleo_aggregate, dedup,
+                                    fedavg, staleness_gamma, weighted_sum)
+
+
+def _model(val):
+    return {"w": np.full((3, 2), val, np.float32)}
+
+
+def _meta(sid, size=100.0, epoch=0, ts=0.0):
+    return SatelliteMeta(sid, size, (0.0, 0.0), ts, epoch)
+
+
+def test_fedavg_equal_sizes_is_mean():
+    out = fedavg([_model(0.0), _model(2.0)], [50, 50])
+    np.testing.assert_allclose(out["w"], 1.0)
+
+
+def test_fedavg_weighted():
+    out = fedavg([_model(0.0), _model(4.0)], [300, 100])
+    np.testing.assert_allclose(out["w"], 1.0)
+
+
+def test_weighted_sum_with_base():
+    out = weighted_sum([_model(2.0)], [0.5], base=_model(4.0), base_weight=0.5)
+    np.testing.assert_allclose(out["w"], 3.0)
+
+
+def test_dedup_keeps_latest():
+    models = [_model(1.0), _model(2.0), _model(3.0)]
+    metas = [_meta(7, ts=1.0), _meta(7, ts=5.0), _meta(8, ts=2.0)]
+    m2, t2 = dedup(models, metas)
+    assert len(m2) == 2
+    vals = sorted(float(m["w"][0, 0]) for m in m2)
+    assert vals == [2.0, 3.0]
+
+
+def test_staleness_gamma_bounds():
+    metas = [_meta(0, size=100, epoch=2), _meta(1, size=100, epoch=4)]
+    g = staleness_gamma(metas, 200.0, beta=4)
+    assert 0.0 <= g <= 1.0
+    assert g == pytest.approx((0.5 * 0.5) + (0.5 * 1.0))
+
+
+def test_asyncfleo_all_fresh_is_fedavg_step():
+    w_prev = _model(0.0)
+    models = [_model(1.0), _model(3.0)]
+    metas = [_meta(0, size=100, epoch=5), _meta(1, size=100, epoch=5)]
+    w, info = asyncfleo_aggregate(w_prev, {0: [0, 1]}, models, metas, beta=5)
+    assert info["gamma"] == 1.0
+    np.testing.assert_allclose(w["w"], 2.0)     # pure data-weighted average
+
+
+def test_asyncfleo_stale_group_discounted():
+    w_prev = _model(10.0)
+    models = [_model(0.0)]
+    metas = [_meta(0, size=100, epoch=1)]       # stale at beta=4
+    w, info = asyncfleo_aggregate(w_prev, {0: [0]}, models, metas, beta=4)
+    g = info["gamma"]
+    assert 0.0 < g < 1.0
+    np.testing.assert_allclose(w["w"], (1 - g) * 10.0, rtol=1e-6)
+    assert info["stale_groups"] == 1
+
+
+def test_asyncfleo_fresh_shadows_stale_within_group():
+    """Stale models in a group WITH fresh ones are discarded this epoch."""
+    w_prev = _model(0.0)
+    models = [_model(4.0), _model(-100.0)]
+    metas = [_meta(0, epoch=3), _meta(1, epoch=0)]
+    w, info = asyncfleo_aggregate(w_prev, {0: [0, 1]}, models, metas, beta=3)
+    assert info["selected"] == 1
+    np.testing.assert_allclose(w["w"], 4.0)
+
+
+def test_asyncfleo_convexity():
+    """Output leaves lie within [min, max] of inputs+base (convex combo)."""
+    rng = np.random.default_rng(0)
+    w_prev = {"w": rng.standard_normal((4,)).astype(np.float32)}
+    models = [{"w": rng.standard_normal((4,)).astype(np.float32)} for _ in range(3)]
+    metas = [_meta(i, size=rng.integers(50, 200), epoch=rng.integers(0, 3))
+             for i in range(3)]
+    w, _ = asyncfleo_aggregate(w_prev, {0: [0, 1], 1: [2]}, models, metas, beta=2)
+    allv = np.stack([w_prev["w"]] + [m["w"] for m in models])
+    assert (w["w"] <= allv.max(0) + 1e-5).all()
+    assert (w["w"] >= allv.min(0) - 1e-5).all()
+
+
+def test_strict_paper_eq14():
+    w_prev = _model(0.0)
+    models = [_model(1.0), _model(1.0)]
+    metas = [_meta(0, epoch=2), _meta(1, epoch=2)]
+    w, info = asyncfleo_aggregate(w_prev, {0: [0, 1]}, models, metas, beta=2,
+                                  strict_paper_eq14=True)
+    # literal eq. 14: each selected model weighted by gamma (=1 here) -> sum=2
+    np.testing.assert_allclose(w["w"], 2.0)

@@ -1,0 +1,36 @@
+import numpy as np
+import pytest
+
+from repro.checkpoint import (load_pytree, load_server_state, save_pytree,
+                              save_server_state)
+
+
+def test_pytree_roundtrip(tmp_path):
+    tree = {"layers": {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                       "b": np.zeros((4,), np.float32)},
+            "embed": {"table": np.ones((7, 2), np.float32)}}
+    p = str(tmp_path / "ckpt.npz")
+    save_pytree(p, tree)
+    back = load_pytree(p)
+    np.testing.assert_array_equal(back["layers"]["w"], tree["layers"]["w"])
+    np.testing.assert_array_equal(back["embed"]["table"], tree["embed"]["table"])
+
+
+def test_server_state_roundtrip(tmp_path):
+    model = {"w": np.full((2, 2), 3.0, np.float32)}
+    p = str(tmp_path / "server.npz")
+    save_server_state(p, global_model=model, epoch=7,
+                      grouping=[[0, 1], [2]], metadata={"5": 3})
+    m2, side = load_server_state(p)
+    np.testing.assert_array_equal(m2["w"], model["w"])
+    assert side["epoch"] == 7
+    assert side["grouping"] == [[0, 1], [2]]
+
+
+def test_bf16_leaves_roundtrip(tmp_path):
+    import jax.numpy as jnp
+    tree = {"w": np.asarray(jnp.ones((3,), jnp.bfloat16))}
+    p = str(tmp_path / "bf16.npz")
+    save_pytree(p, tree)
+    back = load_pytree(p)
+    assert back["w"].shape == (3,)

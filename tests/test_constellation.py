@@ -1,0 +1,67 @@
+import numpy as np
+import pytest
+
+from repro.core.constellation import (GroundNode, R_EARTH, WalkerDelta,
+                                      make_ps_nodes, paper_constellation,
+                                      OMEGA_EARTH)
+
+
+def test_kepler_period():
+    c = paper_constellation()
+    # 2000 km LEO: ~127 min
+    assert 120 * 60 < c.period_s < 135 * 60
+    # v = sqrt(GM/r) ~ 6.9 km/s at 2000 km
+    assert 6.5e3 < c.velocity < 7.2e3
+
+
+def test_positions_on_sphere():
+    c = paper_constellation()
+    for t in [0.0, 1234.5, c.period_s * 1.37]:
+        pos = c.positions(t)
+        assert pos.shape == (40, 3)
+        np.testing.assert_allclose(np.linalg.norm(pos, axis=-1),
+                                   c.radius_m, rtol=1e-9)
+
+
+def test_positions_periodicity():
+    c = paper_constellation()
+    np.testing.assert_allclose(c.positions(0.0), c.positions(c.period_s),
+                               atol=1e-3)
+
+
+def test_equal_spacing_in_orbit():
+    c = paper_constellation()
+    pos = c.positions(0.0)
+    o0 = pos[:8]
+    # adjacent satellites in one orbit are equally spaced (same chord)
+    chords = [np.linalg.norm(o0[i] - o0[(i + 1) % 8]) for i in range(8)]
+    np.testing.assert_allclose(chords, chords[0], rtol=1e-9)
+
+
+def test_ground_node_rotates_with_earth():
+    g = GroundNode("x", 37.95, -91.77, 0.0)
+    p0 = g.position(0.0)
+    day = 2 * np.pi / OMEGA_EARTH
+    np.testing.assert_allclose(p0, g.position(day), atol=1e-3)
+    assert np.linalg.norm(g.position(1000.0) - p0) > 1e3
+
+
+def test_ground_node_radius():
+    g = GroundNode("h", 0.0, 0.0, 20e3, kind="hap")
+    np.testing.assert_allclose(np.linalg.norm(g.position(0.0)),
+                               R_EARTH + 20e3, rtol=1e-12)
+
+
+def test_ps_scenarios():
+    assert len(make_ps_nodes("gs")) == 1
+    assert len(make_ps_nodes("twohap")) == 2
+    assert make_ps_nodes("gs-np")[0].lat_deg == 90.0
+    assert make_ps_nodes("hap")[0].altitude_m == 20e3
+    with pytest.raises(ValueError):
+        make_ps_nodes("bogus")
+
+
+def test_orbit_indexing():
+    c = paper_constellation()
+    assert c.orbit_of(0) == 0 and c.orbit_of(39) == 4
+    assert list(c.orbit_ids()[:9]) == [0] * 8 + [1]

@@ -1,0 +1,59 @@
+import numpy as np
+import pytest
+
+from repro.data import (class_conditional_images, dirichlet_partition,
+                        iid_partition, paper_noniid_partition, token_stream)
+
+
+def test_images_shape_and_range():
+    x, y = class_conditional_images(0, 200)
+    assert x.shape == (200, 28, 28, 1) and y.shape == (200,)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert set(np.unique(y)) <= set(range(10))
+
+
+def test_prototypes_shared_across_seeds():
+    """Same proto_seed => same task; different sample seeds give new samples."""
+    x0, y0 = class_conditional_images(0, 500)
+    x1, y1 = class_conditional_images(1, 500)
+    # class-0 means should correlate strongly across splits
+    m0 = x0[y0 == 0].mean(0).ravel()
+    m1 = x1[y1 == 0].mean(0).ravel()
+    corr = np.corrcoef(m0, m1)[0, 1]
+    assert corr > 0.5
+
+
+def test_iid_partition_disjoint_cover():
+    _, y = class_conditional_images(0, 400)
+    parts = iid_partition(y, 8, 0)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 400
+    assert len(np.unique(allidx)) == 400
+
+
+def test_paper_noniid_partition_class_split():
+    _, y = class_conditional_images(0, 2000)
+    orbits = np.arange(40) // 8
+    parts = paper_noniid_partition(y, orbits, 0)
+    # satellites in orbits 0-1 hold only classes 0-3; orbits 2-4 only 4-9
+    for s in range(16):
+        assert set(np.unique(y[parts[s]])) <= {0, 1, 2, 3}
+    for s in range(16, 40):
+        assert set(np.unique(y[parts[s]])) <= {4, 5, 6, 7, 8, 9}
+    allidx = np.concatenate(parts)
+    assert len(np.unique(allidx)) == len(allidx)
+
+
+def test_dirichlet_partition_cover():
+    _, y = class_conditional_images(0, 500)
+    parts = dirichlet_partition(y, 10, alpha=0.5, seed=0)
+    allidx = np.concatenate([p for p in parts if len(p)])
+    assert len(np.unique(allidx)) == len(allidx) == 500
+
+
+def test_token_stream():
+    t = token_stream(0, 10_000, 512)
+    assert t.shape == (10_000,) and t.dtype == np.int32
+    assert t.min() >= 0 and t.max() < 512
+    # zipf: low ids much more common
+    assert (t < 64).mean() > (t >= 448).mean()

@@ -1,0 +1,53 @@
+import numpy as np
+import pytest
+
+from repro.core.grouping import (GroupingState, flatten_model, group_by_gaps,
+                                 model_distance, partial_global_model)
+
+
+def _model(val, shape=(4, 3)):
+    return {"w": np.full(shape, val, np.float32), "b": np.full((3,), val, np.float32)}
+
+
+def test_flatten_and_distance():
+    m = _model(1.0)
+    ref = flatten_model(_model(0.0))
+    assert model_distance(m, ref) == pytest.approx(np.sqrt(15.0))
+
+
+def test_partial_global_model_weighted():
+    pm = partial_global_model([_model(0.0), _model(1.0)], [1.0, 3.0])
+    np.testing.assert_allclose(pm["w"], 0.75)
+
+
+def test_group_by_gaps_three_clusters():
+    d = {0: 1.0, 1: 1.1, 2: 5.0, 3: 5.2, 4: 9.0, 5: 9.3, 6: 1.05, 7: 9.1}
+    groups = group_by_gaps(d, num_groups=3)
+    assert len(groups) == 3
+    sets = [set(g) for g in groups]
+    assert {0, 1, 6} in sets and {2, 3} in sets and {4, 5, 7} in sets
+
+
+def test_group_by_gaps_fewer_orbits_than_groups():
+    groups = group_by_gaps({0: 1.0, 1: 2.0}, num_groups=3)
+    assert len(groups) == 2
+
+
+def test_grouping_state_incremental():
+    gs = GroupingState(num_groups=2)
+    gs.set_reference(_model(0.0))
+    # first two orbits: one near, one far
+    g0 = gs.observe_orbit(0, [_model(0.1)], [1.0])
+    g1 = gs.observe_orbit(1, [_model(5.0)], [1.0])
+    assert g0 != g1 or len(gs.groups) == 1
+    # known orbit keeps its group
+    assert gs.observe_orbit(0, [_model(99.0)], [1.0]) == g0
+    # new orbit near orbit 1's distance joins orbit 1's group
+    g2 = gs.observe_orbit(2, [_model(5.1)], [1.0])
+    assert g2 == gs.group_of(1)
+    assert gs.all_grouped(3)
+
+
+def test_grouping_deterministic():
+    d = {i: float(v) for i, v in enumerate([3, 1, 4, 1.5, 9, 2.6, 5.8])}
+    assert group_by_gaps(d, 3) == group_by_gaps(dict(reversed(list(d.items()))), 3)

@@ -1,0 +1,133 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.chunk_scan.ops import chunk_scan
+from repro.kernels.chunk_scan.ref import chunk_scan_ref
+from repro.kernels.fed_agg.ops import fed_agg, fed_agg_pytree
+from repro.kernels.fed_agg.ref import fed_agg_flat_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.pairwise_dist.ops import pairwise_dist, model_pairwise_dist
+from repro.kernels.pairwise_dist.ref import pairwise_dist_sq_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------------------
+# flash_attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 128, 2, 2, 64),
+    (2, 256, 4, 2, 64),
+    (1, 200, 4, 1, 32),      # non-multiple-of-block seq, strong GQA
+    (2, 64, 8, 8, 128),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 48), (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, KV, hd, causal, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = (jax.random.normal(ks[0], (B, S, H, hd)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, S, KV, hd)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, S, KV, hd)) * 0.5).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    kk, vv = jnp.repeat(k, H // KV, 2), jnp.repeat(v, H // KV, 2)
+
+    def fl(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    ref = attention_ref(fl(q), fl(kk), fl(vv), causal=causal, window=window)
+    ref = ref.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+# --------------------------------------------------------------------------
+# chunk_scan
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,H,K,V,chunk", [
+    (1, 64, 2, 8, 16, 16),
+    (2, 128, 3, 16, 32, 32),
+    (1, 96, 1, 4, 64, 32),
+])
+@pytest.mark.parametrize("mode", ["rwkv", "mamba"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chunk_scan_sweep(B, T, H, K, V, chunk, mode, dtype):
+    ks = jax.random.split(KEY, 7)
+    r = (jax.random.normal(ks[0], (B, T, H, K)) * 0.3).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, T, H, K)) * 0.3).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, T, H, V)) * 0.3).astype(dtype)
+    s0 = jax.random.normal(ks[3], (B, H, K, V)) * 0.1
+    if mode == "rwkv":
+        ld = -jax.random.uniform(ks[4], (B, T, H, K)) * 0.8
+        u = jax.random.normal(ks[5], (H, K)) * 0.2
+        kw = dict(include_current=False, bonus=u)
+    else:
+        ld = -jax.random.uniform(ks[4], (B, T, H)) * 0.8
+        kw = dict(include_current=True)
+    y, s_fin = chunk_scan(r, k, v, ld, s0, chunk=chunk, **kw)
+    y_ref, s_ref = chunk_scan_ref(r, k, v, ld, s0, **kw)
+    tol = 5e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), atol=tol, rtol=0.1)
+    np.testing.assert_allclose(np.asarray(s_fin), np.asarray(s_ref),
+                               atol=tol, rtol=0.1)
+
+
+# --------------------------------------------------------------------------
+# fed_agg
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("C,N", [(2, 100), (7, 10_000), (16, 2048), (3, 5000)])
+@pytest.mark.parametrize("base_weight", [0.0, 0.35])
+def test_fed_agg_sweep(C, N, base_weight):
+    ks = jax.random.split(KEY, 3)
+    stack = jax.random.normal(ks[0], (C, N))
+    gamma = jax.random.uniform(ks[1], (C,)) / C
+    base = jax.random.normal(ks[2], (N,))
+    out = fed_agg(stack, gamma, base, base_weight)
+    ref = fed_agg_flat_ref(stack, gamma, base, base_weight)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_fed_agg_pytree_matches_treemap():
+    rng = np.random.default_rng(0)
+    models = [{"a": rng.standard_normal((5, 3)).astype(np.float32),
+               "b": rng.standard_normal((7,)).astype(np.float32)}
+              for _ in range(4)]
+    base = {"a": rng.standard_normal((5, 3)).astype(np.float32),
+            "b": rng.standard_normal((7,)).astype(np.float32)}
+    gamma = np.array([0.1, 0.2, 0.3, 0.1], np.float32)
+    out = fed_agg_pytree(models, gamma, base, 0.3)
+    expect_a = 0.3 * base["a"] + sum(g * m["a"] for g, m in zip(gamma, models))
+    np.testing.assert_allclose(np.asarray(out["a"]), expect_a, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# pairwise_dist
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,N", [(2, 50), (5, 9000), (8, 4096), (3, 4097)])
+def test_pairwise_dist_sweep(M, N):
+    x = jax.random.normal(jax.random.fold_in(KEY, N), (M, N))
+    d = pairwise_dist(x, squared=True)
+    ref = pairwise_dist_sq_ref(x)
+    scale = float(jnp.maximum(ref.max(), 1.0))
+    np.testing.assert_allclose(np.asarray(d) / scale, np.asarray(ref) / scale,
+                               atol=1e-5)
+    # diagonal ~ 0, symmetric
+    assert float(jnp.abs(jnp.diagonal(d)).max()) / scale < 1e-4
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d).T, atol=1e-3)
+
+
+def test_model_pairwise_dist():
+    models = [{"w": np.full((3, 2), float(v), np.float32)} for v in (0, 1, 3)]
+    d = model_pairwise_dist(models)
+    np.testing.assert_allclose(np.asarray(d)[0, 1], np.sqrt(6.0), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(d)[0, 2], np.sqrt(54.0), rtol=1e-5)

@@ -1,0 +1,115 @@
+"""Launch-layer logic: specs, windowing, HLO parsing, roofline estimators."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.roofline import (analytic_flops, analytic_hbm_bytes,
+                                 model_flops, roofline_terms)
+from repro.configs import ARCHS, SHAPES, applicable, get_config, get_shape
+from repro.configs.base import LONG_CONTEXT_WINDOW
+from repro.launch.hlo_analysis import collective_bytes, _shape_bytes
+from repro.launch.specs import cache_specs, input_specs, param_specs
+from repro.launch.steps import cache_len_for, window_for
+
+
+def test_window_only_for_long_dense():
+    qwen = get_config("qwen3-4b")
+    rwkv = get_config("rwkv6-7b")
+    assert window_for(qwen, get_shape("long_500k")) == LONG_CONTEXT_WINDOW
+    assert window_for(qwen, get_shape("decode_32k")) == 0
+    assert window_for(rwkv, get_shape("long_500k")) == 0     # SSM: native
+    assert window_for(get_config("deepseek-v2-236b"), get_shape("long_500k")) \
+        == LONG_CONTEXT_WINDOW                               # MLA is attention
+
+
+def test_cache_len_ring_buffer():
+    qwen = get_config("qwen3-4b")
+    assert cache_len_for(qwen, get_shape("long_500k")) == LONG_CONTEXT_WINDOW
+    assert cache_len_for(qwen, get_shape("decode_32k")) == 32768
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("shape", sorted(SHAPES))
+def test_input_specs_all_pairs(arch, shape):
+    cfg, sc = get_config(arch), get_shape(shape)
+    specs = input_specs(cfg, sc)
+    assert isinstance(specs, dict) and specs
+    for leaf in jax.tree_util.tree_leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+        assert all(d > 0 for d in leaf.shape)
+    if sc.kind == "decode":
+        assert specs["tokens"].shape == (sc.global_batch, 1)
+        if applicable(cfg, sc):
+            cache = cache_specs(cfg, sc)
+            assert jax.tree_util.tree_leaves(cache)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_specs_abstract(arch):
+    specs = param_specs(get_config(arch))
+    for leaf in jax.tree_util.tree_leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)   # never allocated
+
+
+def test_collective_parser():
+    hlo = """
+  %ag = bf16[8,128] all-gather(%x), replica_groups={}
+  %ar.1 = f32[256] all-reduce(%y), to_apply=%sum
+  %rs = (f32[16,16], f32[4]) reduce-scatter(%a, %b), dimensions={0}
+  %cp = u32[2,2] collective-permute(%z), source_target_pairs={{0,1}}
+  %dot = f32[8,8] dot(%p, %q)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 128 * 2
+    assert out["all-reduce"] == 256 * 4
+    assert out["reduce-scatter"] == 16 * 16 * 4 + 4 * 4
+    assert out["collective-permute"] == 4 * 4
+    assert out["total"] == sum(v for k, v in out.items()
+                               if k not in ("total", "_counts"))
+
+
+def test_shape_bytes_tuple():
+    assert _shape_bytes("(bf16[4,4], f32[2])") == 32 + 8
+    assert _shape_bytes("pred[100]") == 100
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "deepseek-v2-236b", "rwkv6-7b",
+                                  "zamba2-2.7b"])
+def test_analytic_flops_sane(arch):
+    cfg = get_config(arch)
+    for shape in SHAPES.values():
+        if not applicable(cfg, shape):
+            continue
+        fl = analytic_flops(cfg, shape)
+        hb = analytic_hbm_bytes(cfg, shape)
+        mf = model_flops(cfg, shape)
+        assert fl > 0 and hb > 0 and mf > 0
+        assert mf <= fl * 1.01, (arch, shape.name)   # useful <= total
+
+
+def test_q_chunks_reduces_attention_flops():
+    cfg = get_config("deepseek-v2-236b")
+    shape = get_shape("prefill_32k")
+    base = analytic_flops(cfg, shape)
+    chunked = analytic_flops(cfg, shape, q_chunks=8)
+    assert chunked < base
+    # the reduction is bounded by the attention share and the (n+1)/2n factor
+    assert chunked > base * 0.4
+
+
+def test_capacity_factor_scales_expert_flops():
+    cfg = get_config("kimi-k2-1t-a32b")
+    shape = get_shape("train_4k")
+    lo = analytic_flops(cfg, shape, capacity_factor=1.0)
+    hi = analytic_flops(cfg, shape, capacity_factor=2.0)
+    assert hi > lo
+
+
+def test_roofline_terms_from_entry():
+    entry = {"arch": "qwen3-4b", "shape": "train_4k", "num_devices": 256,
+             "mesh_shape": [16, 16], "collective_bytes": {"total": 1e9},
+             "flops": 1e12, "bytes_accessed": 1e10}
+    r = roofline_terms(entry)
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert r["compute_s"] > 0 and 0 < r["useful_ratio"] <= 1.0

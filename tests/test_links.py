@@ -1,0 +1,49 @@
+import numpy as np
+import pytest
+
+from repro.core.links import LinkModel, dbm_to_watt, dbi_to_linear, model_bits
+
+
+def test_dbm():
+    assert abs(dbm_to_watt(30.0) - 1.0) < 1e-9
+    assert abs(dbm_to_watt(40.0) - 10.0) < 1e-8
+    assert abs(dbi_to_linear(0.0) - 1.0) < 1e-12
+
+
+def test_fspl_quadratic():
+    lm = LinkModel()
+    assert lm.fspl(2000e3) / lm.fspl(1000e3) == pytest.approx(4.0)
+
+
+def test_snr_and_shannon_monotonic():
+    lm = LinkModel()
+    d = np.array([500e3, 1000e3, 2000e3, 4000e3])
+    snrs = [lm.snr(x) for x in d]
+    rates = [lm.shannon_rate(x) for x in d]
+    assert all(a > b for a, b in zip(snrs, snrs[1:]))
+    assert all(a > b for a, b in zip(rates, rates[1:]))
+    assert all(r > 0 for r in rates)
+
+
+def test_delays():
+    lm = LinkModel()
+    # paper setting: fixed 16 Mb/s
+    assert lm.transmission_delay(16e6) == pytest.approx(1.0)
+    assert lm.propagation_delay(299_792_458.0) == pytest.approx(1.0)
+    total = lm.total_delay(16e6, 2000e3)
+    assert total > lm.transmission_delay(16e6)
+
+
+def test_model_bits():
+    import numpy as np
+    tree = {"a": np.zeros((10, 10)), "b": np.zeros((5,))}
+    assert model_bits(tree) == 105 * 32
+
+
+def test_fso_link():
+    from repro.core.links import fso_link
+    l = fso_link()
+    # FSO moves a 3.2 Mb CNN model in microseconds vs 0.2 s at 16 Mb/s RF
+    assert l.transmission_delay(3.2e6) < 1e-3
+    assert LinkModel().transmission_delay(3.2e6) == pytest.approx(0.2)
+    assert l.carrier_freq_hz > 1e14                 # optical

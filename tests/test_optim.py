@@ -1,0 +1,45 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw, apply_updates, clip_by_global_norm, global_norm, sgd
+
+
+def _quadratic(params):
+    return sum(jnp.sum(jnp.square(l)) for l in jax.tree_util.tree_leaves(params))
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), sgd(0.05, momentum=0.9),
+                                 adamw(0.05), adamw(0.05, weight_decay=0.01)])
+def test_optimizers_decrease_quadratic(opt):
+    params = {"a": jnp.ones((4, 4)), "b": jnp.full((3,), 2.0)}
+    state = opt.init(params)
+    loss0 = float(_quadratic(params))
+    for _ in range(50):
+        grads = jax.grad(_quadratic)(params)
+        upd, state = opt.update(grads, state, params)
+        params = apply_updates(params, upd)
+    assert float(_quadratic(params)) < 0.2 * loss0
+
+
+def test_global_norm_and_clip():
+    tree = {"a": jnp.full((3,), 4.0), "b": jnp.full((4,), 3.0)}
+    gn = float(global_norm(tree))
+    assert gn == pytest.approx(np.sqrt(3 * 16 + 4 * 9))
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    # no-op when under the cap
+    clipped2, _ = clip_by_global_norm(tree, 1e9)
+    np.testing.assert_allclose(np.asarray(clipped2["a"]), 4.0)
+
+
+def test_adamw_state_shapes_and_dtype():
+    opt = adamw(1e-3)
+    params = {"w": jnp.ones((5, 2), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state["m"]["w"].dtype == jnp.float32       # fp32 master moments
+    grads = {"w": jnp.ones((5, 2), jnp.bfloat16)}
+    upd, state = opt.update(grads, state, params)
+    assert upd["w"].dtype == jnp.bfloat16             # cast back to param dtype
+    assert int(state["step"]) == 1

@@ -1,0 +1,71 @@
+import numpy as np
+import pytest
+
+from repro.core.constellation import make_ps_nodes, paper_constellation
+from repro.core.links import LinkModel
+from repro.core.propagation import PropagationModel
+from repro.core.topology import RingOfStars
+from repro.core.visibility import VisibilityTimeline
+
+BITS = 1e6 * 32
+
+
+@pytest.fixture(scope="module", params=["hap", "twohap"])
+def prop(request):
+    c = paper_constellation()
+    tl = VisibilityTimeline(c, make_ps_nodes(request.param), 86400.0, 10.0)
+    topo = RingOfStars(c, tl.nodes, tl)
+    return PropagationModel(topo, LinkModel())
+
+
+def test_downlink_times_causal(prop):
+    recv = prop.downlink_times(0.0, BITS, source=0)
+    finite = recv[np.isfinite(recv)]
+    assert len(finite) > 0
+    assert (finite >= 0.0).all()
+    # visible satellites receive before the invisible ones they relay to
+    vis0 = prop.topo.timeline.visible(0.0)[:, 0]
+    if vis0.any() and (~vis0).any():
+        assert recv[vis0].min() <= recv[~vis0].min() + 1e9
+
+
+def test_downlink_relay_bounds(prop):
+    """A satellite reached via k ISL hops receives exactly k hop-delays after
+    its seed when its orbit has a visible seed at t0."""
+    topo = prop.topo
+    recv = prop.downlink_times(0.0, BITS, source=0)
+    hop = prop.isl_hop_delay(BITS)
+    for orbit in range(topo.constellation.num_orbits):
+        sats = topo.orbit_sats(orbit)
+        rs = recv[sats]
+        if not np.isfinite(rs).all():
+            continue
+        # max spread within an orbit <= (N/2 hops) * hop delay + direct spread
+        assert rs.max() - rs.min() <= 4 * hop + 60.0
+
+
+def test_uplink_after_done(prop):
+    t_done = 1000.0
+    for sat in range(0, 40, 7):
+        t_arr, hap = prop.uplink(sat, t_done, BITS, sink=0)
+        if np.isfinite(t_arr):
+            assert t_arr > t_done
+            assert 0 <= hap < prop.topo.num_ps
+
+
+def test_uplink_visible_faster_than_invisible(prop):
+    """Satellites visible at t_done upload sooner (no waiting)."""
+    tl = prop.topo.timeline
+    t = 0.0
+    vis = tl.visible(t).any(axis=1)
+    if vis.any() and (~vis).any():
+        t_vis, _ = prop.uplink(int(np.flatnonzero(vis)[0]), t, BITS, 0)
+        # the visible satellite's arrival is prompt (< 10 min)
+        assert t_vis - t < 600.0
+
+
+def test_hap_receive_times_ring(prop):
+    ht = prop.hap_receive_times(0.0, BITS, source=0)
+    assert ht[0] == 0.0
+    if len(ht) > 1:
+        assert (ht[1:] > 0).all()

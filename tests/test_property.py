@@ -1,0 +1,106 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import SatelliteMeta, asyncfleo_aggregate, fedavg
+from repro.core.constellation import WalkerDelta
+from repro.core.grouping import group_by_gaps
+from repro.kernels.fed_agg.ops import fed_agg
+from repro.kernels.fed_agg.ref import fed_agg_flat_ref
+from repro.models.scan_ops import chunked_scan, recurrent_scan
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(vals=st.lists(st.floats(-10, 10), min_size=2, max_size=6),
+       sizes=st.lists(st.integers(1, 500), min_size=2, max_size=6))
+def test_fedavg_convex_hull(vals, sizes):
+    n = min(len(vals), len(sizes))
+    models = [{"w": np.full((3,), v, np.float32)} for v in vals[:n]]
+    out = fedavg(models, sizes[:n])
+    assert out["w"].min() >= min(vals[:n]) - 1e-4
+    assert out["w"].max() <= max(vals[:n]) + 1e-4
+
+
+@settings(**SETTINGS)
+@given(vals=st.lists(st.floats(-5, 5), min_size=1, max_size=5),
+       epochs=st.lists(st.integers(0, 4), min_size=1, max_size=5),
+       beta=st.integers(1, 4), prev=st.floats(-5, 5))
+def test_asyncfleo_always_convex(vals, epochs, beta, prev):
+    n = min(len(vals), len(epochs))
+    models = [{"w": np.full((2,), v, np.float32)} for v in vals[:n]]
+    metas = [SatelliteMeta(i, 100.0, (0, 0), 0.0, e)
+             for i, e in enumerate(epochs[:n])]
+    w_prev = {"w": np.full((2,), prev, np.float32)}
+    groups = {0: list(range(n))}
+    w, info = asyncfleo_aggregate(w_prev, groups, models, metas, beta)
+    lo = min(vals[:n] + [prev]) - 1e-4
+    hi = max(vals[:n] + [prev]) + 1e-4
+    assert (w["w"] >= lo).all() and (w["w"] <= hi).all()
+    assert 0.0 <= info["gamma"] <= 1.0
+
+
+@settings(**SETTINGS)
+@given(ds=st.lists(st.floats(0.01, 100), min_size=1, max_size=12),
+       k=st.integers(1, 4))
+def test_group_by_gaps_partition(ds, k):
+    d = {i: v for i, v in enumerate(ds)}
+    groups = group_by_gaps(d, num_groups=k)
+    flat = [o for g in groups for o in g]
+    assert sorted(flat) == sorted(d)                    # exact partition
+    # contiguity in distance order: max of one group <= min of next
+    for a, b in zip(groups, groups[1:]):
+        assert max(d[o] for o in a) <= min(d[o] for o in b) + 1e-12
+
+
+@settings(**SETTINGS)
+@given(o=st.integers(1, 6), n=st.integers(1, 10),
+       alt=st.floats(500e3, 2000e3),
+       t=st.floats(0, 20000))
+def test_walker_positions_on_shell(o, n, alt, t):
+    c = WalkerDelta(o, n, alt, 80.0)
+    pos = c.positions(float(t))
+    np.testing.assert_allclose(np.linalg.norm(pos, axis=-1), c.radius_m,
+                               rtol=1e-9)
+
+
+@settings(**SETTINGS)
+@given(c=st.integers(1, 8), n=st.integers(1, 600),
+       bw=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_fed_agg_kernel_property(c, n, bw, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    stack = jax.random.normal(ks[0], (c, n))
+    gamma = jax.random.uniform(ks[1], (c,)) / c
+    base = jax.random.normal(ks[2], (n,))
+    out = fed_agg(stack, gamma, base, bw)
+    ref = fed_agg_flat_ref(stack, gamma, base, bw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), chunk=st.sampled_from([8, 16, 32]),
+       include_current=st.booleans())
+def test_chunked_scan_equals_sequential(seed, chunk, include_current):
+    key = jax.random.PRNGKey(seed)
+    B, T, H, K, V = 1, 64, 2, 4, 8
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, T, H, K)) * 0.3
+    k = jax.random.normal(ks[1], (B, T, H, K)) * 0.3
+    v = jax.random.normal(ks[2], (B, T, H, V)) * 0.3
+    ld = -jax.random.uniform(ks[3], (B, T, H, K)) * 0.9
+    u = jax.random.normal(ks[4], (H, K)) * 0.1
+    kw = dict(include_current=include_current)
+    if not include_current:
+        kw["bonus"] = u
+    y1, s1 = recurrent_scan(r, k, v, ld, **kw)
+    y2, s2 = chunked_scan(r, k, v, ld, chunk=chunk, **kw)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=2e-5, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=2e-5, rtol=1e-3)

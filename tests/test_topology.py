@@ -1,0 +1,53 @@
+import numpy as np
+import pytest
+
+from repro.core.constellation import make_ps_nodes, paper_constellation
+from repro.core.topology import RingOfStars
+from repro.core.visibility import VisibilityTimeline
+
+
+@pytest.fixture(scope="module")
+def topo():
+    c = paper_constellation()
+    tl = VisibilityTimeline(c, make_ps_nodes("twohap"), 3600.0, 10.0)
+    return RingOfStars(c, tl.nodes, tl)
+
+
+def test_ring_hops(topo):
+    assert topo.ring_hops(0, 0) == 0
+    assert topo.ring_hops(0, 1) == 1
+    assert topo.sink_of(0) == 1 and topo.sink_of(1) == 0
+
+
+def test_isl_neighbors_ring(topo):
+    prev, nxt = topo.isl_neighbors(0)
+    assert prev == 7 and nxt == 1            # orbit 0 is sats 0..7
+    prev, nxt = topo.isl_neighbors(8)
+    assert prev == 15 and nxt == 9
+
+
+def test_isl_ring_distance_metric(topo):
+    # symmetric, zero on self, shorter-arc
+    assert topo.isl_ring_distance(0, 0) == 0
+    assert topo.isl_ring_distance(0, 1) == topo.isl_ring_distance(1, 0) == 1
+    assert topo.isl_ring_distance(0, 7) == 1   # wraparound
+    assert topo.isl_ring_distance(0, 4) == 4   # antipodal in 8-ring
+    assert topo.isl_ring_distance(0, 9) >= 10**9   # cross-orbit: unreachable
+
+
+def test_isl_chord(topo):
+    c = topo.constellation
+    expected = 2 * c.radius_m * np.sin(np.pi / 8)
+    assert topo.isl_chord_m() == pytest.approx(expected)
+
+
+def test_star_members_are_visible(topo):
+    mem = topo.star_members(0, 0.0)
+    vis = topo.timeline.visible(0.0)
+    for s in mem:
+        assert vis[s, 0]
+
+
+def test_ihl_distance_positive(topo):
+    d = topo.ihl_distance(0, 1, 0.0)
+    assert 1e5 < d < 1e7     # Rolla<->Portland ~2400 km

@@ -1,0 +1,63 @@
+import numpy as np
+
+from repro.core.constellation import (GroundNode, R_EARTH, WalkerDelta,
+                                      make_ps_nodes, paper_constellation)
+from repro.core.visibility import (VisibilityTimeline, elevation_deg,
+                                   is_visible, sat_los)
+
+
+def test_elevation_zenith():
+    gnd = np.array([R_EARTH, 0.0, 0.0])
+    sat = np.array([R_EARTH + 2000e3, 0.0, 0.0])
+    assert abs(elevation_deg(sat, gnd) - 90.0) < 1e-6
+
+
+def test_elevation_horizon_negative():
+    gnd = np.array([R_EARTH, 0.0, 0.0])
+    sat = np.array([-(R_EARTH + 2000e3), 0.0, 0.0])   # opposite side
+    assert elevation_deg(sat, gnd) < 0
+
+
+def test_sat_los_earth_block():
+    a = np.array([R_EARTH + 500e3, 0.0, 0.0])
+    b = -a                                             # straight through Earth
+    assert not sat_los(a, b)
+    c = np.array([0.0, R_EARTH + 500e3, 0.0])          # quarter arc: grazing ok
+    assert sat_los(a, np.array([R_EARTH + 2000e3, 1e6, 0.0]))
+    assert sat_los(np.array([R_EARTH + 2000e3, 0, 0]),
+                   np.array([R_EARTH + 2000e3, 1e5, 0]))
+
+
+def test_timeline_grid_and_queries():
+    c = paper_constellation()
+    tl = VisibilityTimeline(c, make_ps_nodes("hap"), 6 * 3600.0, 10.0)
+    assert tl.grid.shape[1] == 40 and tl.grid.shape[2] == 1
+    # every satellite should see the HAP at some point within 6h? not all —
+    # but at least SOME satellite does.
+    assert tl.grid.any()
+    t_vis = tl.next_visible_time(0, 0.0)
+    if t_vis is not None:
+        assert tl.visible(t_vis)[0, 0]
+    t, sat = tl.next_orbit_visible(range(8), 0.0)
+    if t is not None:
+        assert 0 <= sat < 8
+        assert tl.visible(t)[sat].any()
+
+
+def test_visibility_fraction_reasonable():
+    c = paper_constellation()
+    tl = VisibilityTimeline(c, make_ps_nodes("hap"), 86400.0, 30.0)
+    fr = np.mean([tl.visibility_fraction(s) for s in range(40)])
+    # LEO satellite sees one mid-latitude HAP a few % of the time
+    assert 0.005 < fr < 0.5
+
+
+def test_hap_sees_similar_or_more_than_gs():
+    """The paper's rationale: HAP at 20 km has slightly better visibility.
+    At a fixed 10-degree minimum elevation the geometric gain is tiny, so we
+    assert near-parity (the elevation advantage shows up at the horizon and
+    is sub-percent at dt=30 s sampling)."""
+    c = paper_constellation()
+    tl_gs = VisibilityTimeline(c, make_ps_nodes("gs"), 86400.0, 30.0)
+    tl_hap = VisibilityTimeline(c, make_ps_nodes("hap"), 86400.0, 30.0)
+    assert tl_hap.grid.sum() > tl_gs.grid.sum()     # horizon-dip advantage
