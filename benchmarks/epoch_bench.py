@@ -1,0 +1,276 @@
+"""End-to-end epoch benchmark: ModelBank stacked path vs legacy pytrees.
+
+Measures, at constellation sizes S in {40, 200, 1000}:
+
+* the server-side **aggregation + grouping segment** — from the trainer's
+  stacked vmap output to the new global model — on both paths.  The legacy
+  path pays the seed's per-epoch tax (device_get, per-satellite pytree
+  unstack, per-leaf Python loops in grouping/aggregation); the ModelBank
+  path keeps the (C, N) stack on device end to end.  Parity between the two
+  global models is asserted (allclose, atol 1e-5).
+* the vectorized **propagation timing segment** (downlink + uplink_many).
+* the **end-to-end simulated epoch** wall time and sats/sec via
+  ``FLSimulation`` with a noise trainer, in both modes.
+
+Writes ``BENCH_epoch.json`` next to the repo root so successive PRs have a
+perf trajectory.
+
+Usage:  PYTHONPATH=src python benchmarks/epoch_bench.py [--sizes 40,200]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core.aggregation import SatelliteMeta
+from repro.core.constellation import WalkerDelta, make_ps_nodes
+from repro.core.grouping import GroupingState
+from repro.core.links import LinkModel
+from repro.core.modelbank import FlatSpec, ModelBank
+from repro.core.propagation import PropagationModel
+from repro.core.simulator import FLSimulation, SimConfig
+from repro.core.topology import RingOfStars
+from repro.core.visibility import VisibilityTimeline
+from repro.fl.strategies import get_strategy
+
+SATS_PER_ORBIT = 8
+N_LAYERS = 8              # transformer-style pytree: the leaf count (not
+D, FF = 24, 96            # just the param count) drives the legacy path's
+VOCAB = 400               # per-leaf Python churn — ~67 leaves, ~66k params
+
+
+def make_model(key):
+    """LM-shaped federated model (mirrors the LMPool workload)."""
+    leaves = {"embed": jax.random.normal(key, (VOCAB, D), jnp.float32) * 0.1}
+    for i in range(N_LAYERS):
+        k = jax.random.fold_in(key, i + 1)
+        blk = {}
+        for j, (name, shape) in enumerate([
+                ("wq", (D, D)), ("wk", (D, D)), ("wv", (D, D)),
+                ("wo", (D, D)), ("w1", (D, FF)), ("w2", (FF, D)),
+                ("ln1", (D,)), ("ln2", (D,))]):
+            blk[name] = jax.random.normal(jax.random.fold_in(k, j),
+                                          shape, jnp.float32) * 0.1
+        leaves[f"layer{i}"] = blk
+    leaves["ln_f"] = jnp.ones((D,), jnp.float32)
+    leaves["head"] = jax.random.normal(jax.random.fold_in(key, 99),
+                                       (D, VOCAB), jnp.float32) * 0.1
+    return leaves
+
+
+def constellation_of(s: int) -> WalkerDelta:
+    assert s % SATS_PER_ORBIT == 0
+    return WalkerDelta(num_orbits=s // SATS_PER_ORBIT,
+                       sats_per_orbit=SATS_PER_ORBIT, altitude_m=2000e3)
+
+
+class NoiseTrainer:
+    """'Training' = global model + per-satellite noise, via one jitted vmap
+    (stand-in for the real pools; the bench measures the server path)."""
+
+    def __init__(self, w0, scale: float = 0.05):
+        self.spec = FlatSpec.of(w0)
+
+        def _many(flat, keys):
+            noise = jax.vmap(lambda k: scale * jax.random.normal(
+                k, flat.shape, jnp.float32))(keys)
+            return flat[None, :] + noise
+
+        self._many = jax.jit(_many)
+
+    def data_size(self, sat: int) -> int:
+        return 100 + (sat % 7) * 10
+
+    def train_many_stacked(self, sats, params, seed: int):
+        from repro.fl.client import _pad_ids
+        ids, n = _pad_ids(list(sats))          # bucketized: O(log S) traces
+        flat = self.spec.flatten(params)
+        keys = jax.vmap(jax.random.PRNGKey)(
+            jnp.asarray(np.uint32(seed) * np.uint32(65537)
+                        + ids.astype(np.uint32)))
+        stack = self._many(flat, keys)[:n]
+        return ModelBank(self.spec, stack), np.zeros(n)
+
+    def train_many(self, sats, params, seed: int):
+        bank, losses = self.train_many_stacked(sats, params, seed)
+        return bank.to_pytrees(), losses         # the seed's per-epoch tax
+
+
+def _timeit(fn, iters: int = 7) -> float:
+    """Median of per-iteration wall times (robust on noisy shared CPUs)."""
+    import gc
+    fn()                                          # warmup / trace
+    times = []
+    for _ in range(iters):
+        gc.collect()
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _make_metas(S: int, beta: int, rng) -> List[SatelliteMeta]:
+    return [SatelliteMeta(s, 100.0 + (s % 7) * 10, (0.0, 0.0),
+                          ts=float(s),
+                          epoch=beta if rng.random() < 0.7
+                          else int(rng.integers(0, beta)))
+            for s in range(S)]
+
+
+def bench_agg_grouping(S: int, beta: int = 4, seed: int = 0) -> Dict:
+    """Stacked vs legacy server segment from the same trained stack."""
+    key = jax.random.PRNGKey(seed)
+    w0 = make_model(key)
+    trainer = NoiseTrainer(w0)
+    spec = trainer.spec
+    bank, _ = trainer.train_many_stacked(list(range(S)), w0, seed=seed)
+    jax.block_until_ready(bank.stack)
+    rng = np.random.default_rng(seed)
+    metas = _make_metas(S, beta, rng)
+    orbit_of = np.arange(S) // SATS_PER_ORBIT
+    num_orbits = S // SATS_PER_ORBIT
+
+    # per-run state both paths get for free inside FLSimulation: the
+    # grouping reference (set once at w0) and each path's natural base
+    # representation (the simulator caches w_flat across epochs)
+    ref_state = GroupingState(num_groups=3)
+    ref_state.set_reference(w0)
+    ref_np, ref_dev = ref_state.ref_flat, ref_state._ref_dev
+    w0_flat = spec.flatten(w0)
+    jax.block_until_ready(w0_flat)
+
+    def run_path(stacked: bool):
+        gs = GroupingState(ref_flat=ref_np, num_groups=3)
+        gs._ref_dev = ref_dev
+        groups: Dict[int, List[int]] = {}
+        if stacked:
+            models = bank
+            orbit_indices = {o: list(np.flatnonzero(orbit_of == o))
+                             for o in range(num_orbits)}
+            orbit_group = gs.observe_orbits(orbit_indices, bank,
+                                            [m.size for m in metas])
+            for o, idxs in orbit_indices.items():
+                groups.setdefault(orbit_group[o], []).extend(idxs)
+        else:
+            models = bank.to_pytrees()           # the seed's per-epoch tax
+            for orbit in range(num_orbits):
+                idxs = list(np.flatnonzero(orbit_of == orbit))
+                gi = gs.observe_orbit(orbit, [models[j] for j in idxs],
+                                      [metas[j].size for j in idxs])
+                groups.setdefault(gi, []).extend(idxs)
+        w_new, _info = agg.asyncfleo_aggregate(
+            w0_flat if stacked else w0, groups, models, metas, beta)
+        if stacked:
+            w_new = spec.unflatten(w_new)
+        jax.block_until_ready(w_new)
+        return w_new
+
+    w_legacy = run_path(False)
+    w_bank = run_path(True)
+    err = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+              for a, b in zip(jax.tree_util.tree_leaves(w_legacy),
+                              jax.tree_util.tree_leaves(w_bank)))
+    assert err <= 1e-5, f"stacked/legacy parity violated: max|diff|={err}"
+
+    # interleave the two paths so shared-host noise hits both equally;
+    # medians of the paired samples give a stable ratio
+    import gc
+    t_l, t_b = [], []
+    for _ in range(7):
+        gc.collect()
+        t0 = time.perf_counter()
+        run_path(False)
+        t_l.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_path(True)
+        t_b.append(time.perf_counter() - t0)
+    t_legacy, t_bank = float(np.median(t_l)), float(np.median(t_b))
+    return {"S": S, "legacy_s": t_legacy, "bank_s": t_bank,
+            "speedup": t_legacy / t_bank, "parity_max_abs_err": err}
+
+
+def bench_propagation(S: int) -> Dict:
+    c = constellation_of(S)
+    tl = VisibilityTimeline(c, make_ps_nodes("twohap"), 6 * 3600.0, 30.0)
+    topo = RingOfStars(c, tl.nodes, tl)
+    prop = PropagationModel(topo, LinkModel())
+    bits = 30e3 * 32
+
+    t_down = _timeit(lambda: prop.downlink_times(0.0, bits, 0))
+    recv = prop.downlink_times(0.0, bits, 0)
+    sats = np.flatnonzero(np.isfinite(recv))
+    t_up = _timeit(lambda: prop.uplink_many(sats, recv[sats] + 600.0, bits, 1))
+    return {"S": S, "downlink_s": t_down,
+            "uplink_many_s": t_up, "participants": int(len(sats))}
+
+
+def bench_epoch(S: int, epochs: int = 4) -> Dict:
+    key = jax.random.PRNGKey(0)
+    w0 = make_model(key)
+    out = {"S": S}
+    for label, use_bank in (("legacy", False), ("bank", True)):
+        sim = SimConfig(duration_s=86400.0, dt_s=30.0, train_time_s=300.0,
+                        use_model_bank=use_bank)
+        fls = FLSimulation(get_strategy("asyncfleo-twohap"),
+                           NoiseTrainer(w0), None, sim,
+                           constellation=constellation_of(S))
+        t0 = time.perf_counter()
+        hist = fls.run(w0, max_epochs=epochs)
+        dt = time.perf_counter() - t0
+        out[f"epoch_{label}_s"] = dt / max(len(hist), 1)
+        out[f"sats_per_sec_{label}"] = S * len(hist) / dt
+    out["epoch_speedup"] = out["epoch_legacy_s"] / out["epoch_bank_s"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="40,200,1000",
+                    help="comma-separated constellation sizes")
+    ap.add_argument("--out", default="BENCH_epoch.json")
+    ap.add_argument("--skip-epoch", action="store_true",
+                    help="only the agg+grouping / propagation segments")
+    args = ap.parse_args()
+    try:
+        sizes = [int(s) for s in args.sizes.split(",")]
+    except ValueError:
+        ap.error(f"--sizes must be comma-separated integers, got {args.sizes!r}")
+    for s in sizes:
+        if s <= 0 or s % SATS_PER_ORBIT:
+            ap.error(f"--sizes entries must be positive multiples of "
+                     f"{SATS_PER_ORBIT} (sats per orbit), got {s}")
+
+    report = {"sizes": sizes, "agg_grouping": [], "propagation": [],
+              "epoch": []}
+    for S in sizes:
+        r = bench_agg_grouping(S)
+        print(f"S={S:5d} agg+grouping: legacy {r['legacy_s']*1e3:8.1f} ms  "
+              f"bank {r['bank_s']*1e3:8.1f} ms  speedup {r['speedup']:.1f}x  "
+              f"max_err {r['parity_max_abs_err']:.2e}")
+        report["agg_grouping"].append(r)
+        p = bench_propagation(S)
+        print(f"S={S:5d} propagation:  downlink {p['downlink_s']*1e3:8.1f} ms"
+              f"  uplink_many {p['uplink_many_s']*1e3:8.1f} ms")
+        report["propagation"].append(p)
+        if not args.skip_epoch:
+            e = bench_epoch(S)
+            print(f"S={S:5d} epoch e2e:    legacy {e['epoch_legacy_s']:6.2f} s"
+                  f"  bank {e['epoch_bank_s']:6.2f} s  "
+                  f"({e['sats_per_sec_bank']:.0f} sats/s, "
+                  f"{e['epoch_speedup']:.1f}x)")
+            report["epoch"].append(e)
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ from repro.core.links import LinkModel, model_bits
 from repro.core.topology import RingOfStars
 from repro.core.propagation import PropagationModel
 from repro.core.grouping import GroupingState, group_by_gaps, model_distance
+from repro.core.modelbank import FlatSpec, ModelBank
 from repro.core.aggregation import (
     SatelliteMeta, fedavg, asyncfleo_aggregate, staleness_gamma, weighted_sum,
     dedup,

@@ -18,7 +18,10 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+from repro.core.modelbank import ModelBank
 
 
 @dataclasses.dataclass
@@ -34,22 +37,136 @@ class SatelliteMeta:
         return self.epoch >= beta
 
 
-def dedup(models: List, metas: List[SatelliteMeta]):
-    """Filter duplicates (a satellite visible to >1 HAP at once, §IV-C1):
-    keep the most recent timestamp per satellite id."""
+def dedup_indices(metas: List[SatelliteMeta]) -> List[int]:
+    """Indices surviving duplicate-filtering (§IV-C1): keep the most recent
+    timestamp per satellite id.  Host-only — callers with device-resident
+    models use this to adjust row bookkeeping without touching tensors."""
     best: Dict[int, int] = {}
     for i, m in enumerate(metas):
         j = best.get(m.sat_id)
         if j is None or metas[j].ts < m.ts:
             best[m.sat_id] = i
-    keep = sorted(best.values())
+    return sorted(best.values())
+
+
+def dedup(models, metas: List[SatelliteMeta]):
+    """Filter duplicates; ``models`` may be a list of pytrees or a
+    device-resident ``ModelBank`` (row gather only when needed)."""
+    keep = dedup_indices(metas)
+    if len(keep) == len(metas):         # no duplicates: skip the row gather
+        return models, metas
+    if isinstance(models, ModelBank):
+        return models.select(keep), [metas[i] for i in keep]
     return [models[i] for i in keep], [metas[i] for i in keep]
 
 
-def weighted_sum(models: Sequence, weights: Sequence[float], base=None,
+@jax.jit
+def _wsum_flat(stack, w, base, bw):
+    return bw * base + w @ stack
+
+
+@jax.jit
+def _wsum_flat_nobase(stack, w):
+    return w @ stack
+
+
+def _flat_base(bank: ModelBank, base):
+    """Base model as a flat (N,) device vector (None -> None)."""
+    from repro.core.modelbank import flat_base
+    return flat_base(bank.spec, base)
+
+
+def scatter_weights(rows, weights, n_rows: int) -> np.ndarray:
+    """Host-side weight scatter shared by the segmented stacked paths:
+    ``w_seg[rows[j]] = weights[j]`` for every ``rows[j] >= 0`` (model j
+    lives in another segment otherwise)."""
+    w = np.zeros(n_rows, dtype=np.float32)
+    for j, r in enumerate(rows):
+        if r >= 0:
+            w[r] = weights[j]
+    return w
+
+
+def combine_stacked(terms, base_flat=None, base_weight: float = 0.0, *,
+                    use_kernel: bool = False):
+    """w = base_weight * base + sum over (stack, weight_vector) terms.
+
+    Each term is one fused (C_s,) @ (C_s, N) contraction — models split
+    across several device matrices (epoch bank, carried stragglers) are
+    combined without gathering or concatenating rows.  Zero-weight terms
+    are skipped on host.  ``use_kernel`` chains the terms through the
+    Pallas fed_agg kernel (the first pass folds in the base, later passes
+    accumulate).  Returns the flat (N,) result.
+    """
+    live = []
+    for stack, w in terms:
+        if stack is None or stack.shape[0] == 0:
+            continue
+        w = np.asarray(w, np.float32)
+        if not w.any():
+            continue
+        live.append((stack, w))
+    if not live:
+        return (jnp.float32(base_weight) * jnp.asarray(base_flat)
+                if base_flat is not None and base_weight != 0.0
+                else (jnp.zeros_like(base_flat) if base_flat is not None
+                      else None))
+    if use_kernel:
+        from repro.kernels.fed_agg import ops as agg_ops
+        out = None
+        for stack, w in live:
+            if out is None:
+                out = agg_ops.fed_agg(stack, jnp.asarray(w),
+                                      None if base_weight == 0.0
+                                      or base_flat is None
+                                      else jnp.asarray(base_flat),
+                                      base_weight)
+            else:
+                out = agg_ops.fed_agg(stack, jnp.asarray(w), out, 1.0)
+        return out
+    out = None
+    if base_flat is not None and base_weight != 0.0:
+        out = jnp.float32(base_weight) * jnp.asarray(base_flat)
+    for stack, w in live:
+        term = _wsum_flat_nobase(stack, jnp.asarray(w))
+        out = term if out is None else out + term
+    return out
+
+
+def weighted_sum_stacked(bank: ModelBank, weights, base=None,
+                         base_weight: float = 0.0, *,
+                         use_kernel: bool = False) -> jnp.ndarray:
+    """Stacked fast path of :func:`weighted_sum`.
+
+    The per-model weights are a host-side vector (they come from metadata,
+    eq. 13/14); all tensor work is one fused device call — a (1,C)x(C,N)
+    contraction — either through XLA or the Pallas ``fed_agg`` kernel.
+    Returns the flat (N,) result; unflatten via ``bank.spec`` when a pytree
+    is needed.
+    """
+    w = jnp.asarray(np.asarray(weights, np.float32))
+    if use_kernel:
+        from repro.kernels.fed_agg import ops as agg_ops
+        return agg_ops.fed_agg_bank(bank, w, base, base_weight)
+    bflat = _flat_base(bank, base)
+    if bflat is not None and base_weight != 0.0:
+        return _wsum_flat(bank.stack, w, bflat,
+                          jnp.float32(base_weight))
+    return _wsum_flat_nobase(bank.stack, w)
+
+
+def weighted_sum(models, weights: Sequence[float], base=None,
                  base_weight: float = 0.0, *, use_kernel: bool = False):
-    """w = base_weight * base + sum_i weights_i * models_i  (pytree math).
-    ``use_kernel`` routes the reduction through the Pallas fed_agg kernel."""
+    """w = base_weight * base + sum_i weights_i * models_i.
+
+    ``models`` may be a list of pytrees (host math, legacy path) or a
+    ``ModelBank`` — then the whole reduction is a single fused device call
+    and the *flat* (N,) result is returned (see DESIGN.md §2).
+    ``use_kernel`` routes the reduction through the Pallas fed_agg kernel.
+    """
+    if isinstance(models, ModelBank):
+        return weighted_sum_stacked(models, weights, base, base_weight,
+                                    use_kernel=use_kernel)
     if use_kernel:
         from repro.kernels.fed_agg import ops as agg_ops
         return agg_ops.fed_agg_pytree(models, np.asarray(weights, np.float32),
@@ -68,8 +185,8 @@ def weighted_sum(models: Sequence, weights: Sequence[float], base=None,
     return out
 
 
-def fedavg(models: Sequence, sizes: Sequence[float], *, use_kernel=False):
-    """Synchronous FedAvg (eq. 4)."""
+def fedavg(models, sizes: Sequence[float], *, use_kernel=False):
+    """Synchronous FedAvg (eq. 4).  Accepts pytree lists or a ModelBank."""
     total = float(sum(sizes))
     return weighted_sum(models, [s / total for s in sizes], use_kernel=use_kernel)
 
@@ -83,16 +200,13 @@ def staleness_gamma(metas: Sequence[SatelliteMeta], total_data: float,
     return float(np.clip(g, 0.0, 1.0))
 
 
-def asyncfleo_aggregate(w_prev, groups: Dict[int, List[int]], models: List,
-                        metas: List[SatelliteMeta], beta: int, *,
-                        strict_paper_eq14: bool = False,
-                        min_gamma: float = 0.1,
-                        use_kernel: bool = False):
-    """Algorithm 2 lines 12-17.
-
-    ``groups``: group id -> indices into models/metas.
-    Returns (w_new, info dict).
-    """
+def asyncfleo_weights(groups: Dict[int, List[int]],
+                      metas: List[SatelliteMeta], beta: int, *,
+                      strict_paper_eq14: bool = False,
+                      min_gamma: float = 0.1):
+    """Algorithm 2 selection + eq. 13/14 weight vector — pure host metadata
+    math, no tensors.  Returns (selected indices, per-selected weights,
+    gamma, info); selected is empty when nothing qualifies."""
     selected: List[int] = []
     stale_only_groups = 0
     for gi, idxs in groups.items():
@@ -103,12 +217,11 @@ def asyncfleo_aggregate(w_prev, groups: Dict[int, List[int]], models: List,
             selected.extend(idxs)           # stale-only group joins, discounted
             stale_only_groups += 1
     if not selected:
-        return w_prev, {"gamma": 0.0, "selected": 0, "stale_groups": 0}
+        return [], np.zeros(0), 0.0, {"gamma": 0.0, "selected": 0,
+                                      "stale_groups": 0}
 
     total_data = sum(metas[i].size for i in selected)
     sel_metas = [metas[i] for i in selected]
-    sel_models = [models[i] for i in selected]
-
     all_fresh = all(m.is_fresh(beta) for m in sel_metas)
     if all_fresh:
         gamma = 1.0                          # pure data-weighted FedAvg step
@@ -121,12 +234,44 @@ def asyncfleo_aggregate(w_prev, groups: Dict[int, List[int]], models: List,
             raw = np.array([m.size for m in sel_metas], np.float64)
 
     if strict_paper_eq14:
-        weights = np.full(len(sel_models), gamma)
+        weights = np.full(len(selected), gamma)
     else:
         weights = gamma * raw / raw.sum()
+    info = {"gamma": gamma, "selected": len(selected),
+            "stale_groups": stale_only_groups}
+    return selected, weights, gamma, info
+
+
+def asyncfleo_aggregate(w_prev, groups: Dict[int, List[int]], models,
+                        metas: List[SatelliteMeta], beta: int, *,
+                        strict_paper_eq14: bool = False,
+                        min_gamma: float = 0.1,
+                        use_kernel: bool = False):
+    """Algorithm 2 lines 12-17.
+
+    ``groups``: group id -> indices into models/metas.  ``models`` may be a
+    list of pytrees or a device-resident ``ModelBank``; selection and the
+    per-model weight vector are host metadata work either way
+    (:func:`asyncfleo_weights`), the tensor update is one fused call on the
+    stacked path.  Returns (w_new, info dict) — ``w_new`` is flat (N,) on
+    the stacked path, a pytree otherwise.
+    """
+    stacked = isinstance(models, ModelBank)
+    selected, weights, gamma, info = asyncfleo_weights(
+        groups, metas, beta, strict_paper_eq14=strict_paper_eq14,
+        min_gamma=min_gamma)
+    if not selected:
+        return w_prev, info
+
+    if stacked:
+        # no row gather: selection becomes zeros in the weight vector over
+        # the full bank, so the update stays one fused call
+        full = np.zeros(len(models), dtype=np.float64)
+        full[selected] = weights
+        sel_models, weights = models, full
+    else:
+        sel_models = [models[i] for i in selected]
 
     w_new = weighted_sum(sel_models, weights, base=w_prev,
                          base_weight=1.0 - gamma, use_kernel=use_kernel)
-    info = {"gamma": gamma, "selected": len(selected),
-            "stale_groups": stale_only_groups}
     return w_new, info

@@ -81,6 +81,26 @@ class WalkerDelta:
         pos = np.stack([x, y, z1], axis=-1)                     # (T,S,3)
         return pos[0] if scalar else pos
 
+    def positions_at(self, sats, t) -> np.ndarray:
+        """ECI positions of *specific* satellites at per-satellite times.
+        ``sats`` (P,) int, ``t`` scalar or (P,) -> (P, 3).  Unlike
+        ``positions`` this never materializes the full constellation, so
+        per-satellite timing paths stay O(P)."""
+        sats = np.atleast_1d(np.asarray(sats, dtype=np.int64))
+        t = np.broadcast_to(np.asarray(t, dtype=np.float64), sats.shape)
+        O, N = self.num_orbits, self.sats_per_orbit
+        o, s = sats // N, sats % N
+        raan = 2 * np.pi * o / O
+        phase0 = 2 * np.pi * s / N + self.phasing * 2 * np.pi * o / (O * N)
+        u = phase0 + self.mean_motion * t
+        inc = np.deg2rad(self.inclination_deg)
+        r = self.radius_m
+        xp, yp = r * np.cos(u), r * np.sin(u)
+        x1, y1, z1 = xp, yp * np.cos(inc), yp * np.sin(inc)
+        cosO, sinO = np.cos(raan), np.sin(raan)
+        return np.stack([x1 * cosO - y1 * sinO, x1 * sinO + y1 * cosO, z1],
+                        axis=-1)
+
 
 @dataclasses.dataclass(frozen=True)
 class GroundNode:

@@ -11,13 +11,36 @@ members' mean distance is closest.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+from repro.core.modelbank import ModelBank
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _blocked_distances(stack, w, ref, k):
+    """Distances of k equal contiguous-block partial models to ref — one
+    fused O(C*N) batched contraction (weights normalized per block)."""
+    c, n = stack.shape
+    pm = jnp.einsum("kc,kcn->kn", w.reshape(k, c // k),
+                    stack.reshape(k, c // k, n))
+    return jnp.linalg.norm(pm - ref[None, :], axis=1)
+
+
+@jax.jit
+def _dense_distances(weight_matrix, stack, ref):
+    """General case: per-orbit weight rows -> partial models -> distances,
+    one fused (K,C)x(C,N) contraction."""
+    return jnp.linalg.norm(weight_matrix @ stack - ref[None, :], axis=1)
 
 
 def flatten_model(model) -> np.ndarray:
+    if getattr(model, "ndim", None) == 1:         # already a flat vector
+        return np.asarray(model, dtype=np.float32)
     return np.concatenate([np.asarray(l, dtype=np.float32).ravel()
                            for l in jax.tree_util.tree_leaves(model)])
 
@@ -27,9 +50,14 @@ def model_distance(model, ref_flat: np.ndarray) -> float:
     return float(np.linalg.norm(flatten_model(model) - ref_flat))
 
 
-def partial_global_model(models: Sequence, sizes: Sequence[float]):
-    """Data-size-weighted average of one orbit's local models (Fig. 5a)."""
+def partial_global_model(models, sizes: Sequence[float]):
+    """Data-size-weighted average of one orbit's local models (Fig. 5a).
+    With a ``ModelBank`` this is one fused (1,C)x(C,N) device contraction
+    returning the flat (N,) partial model; pytree lists keep host math."""
     total = float(sum(sizes))
+    if isinstance(models, ModelBank):
+        ws = jnp.asarray(np.asarray(sizes, np.float32) / total)
+        return ws @ models.stack
     ws = [s / total for s in sizes]
     return jax.tree.map(
         lambda *leaves: sum(w * np.asarray(l, dtype=np.float32)
@@ -58,13 +86,25 @@ def group_by_gaps(distances: Dict[int, float], num_groups: int = 3) -> List[List
 @dataclasses.dataclass
 class GroupingState:
     """Incremental grouping maintained by the sink HAP."""
-    ref_flat: Optional[np.ndarray] = None          # flat(w0)
+    ref_flat: Optional[np.ndarray] = None          # flat(w0), host copy
     distances: Dict[int, float] = dataclasses.field(default_factory=dict)
     groups: List[List[int]] = dataclasses.field(default_factory=list)
     num_groups: int = 3
+    use_dist_kernel: bool = False      # route distances through pairwise_dist
+    _ref_dev: Optional[object] = dataclasses.field(default=None, repr=False)
 
     def set_reference(self, w0) -> None:
         self.ref_flat = flatten_model(w0)
+        self._ref_dev = jnp.asarray(self.ref_flat)
+
+    def _ref_device(self):
+        """Device copy of ref_flat — derived lazily so a GroupingState
+        built with the public ``ref_flat`` field (legacy style) still works
+        on the stacked paths."""
+        if self._ref_dev is None:
+            assert self.ref_flat is not None, "set_reference(w0) first"
+            self._ref_dev = jnp.asarray(self.ref_flat)
+        return self._ref_dev
 
     def group_of(self, orbit: int) -> Optional[int]:
         for gi, g in enumerate(self.groups):
@@ -72,17 +112,26 @@ class GroupingState:
                 return gi
         return None
 
-    def observe_orbit(self, orbit: int, models: Sequence, sizes: Sequence[float]) -> int:
+    def observe_orbit(self, orbit: int, models, sizes: Sequence[float]) -> int:
         """Ingest an orbit's freshly received models; returns its group id.
         First sighting computes the partial-model distance; known orbits keep
         their stored group (paper: 'directly assigned to the associated
-        group')."""
+        group').  ``models`` may be a pytree list or a ``ModelBank`` — the
+        stacked path fuses the partial model and its distance-to-w0 into
+        device calls (only the scalar distance reaches host)."""
         gi = self.group_of(orbit)
         if gi is not None:
             return gi
         assert self.ref_flat is not None, "set_reference(w0) first"
         pm = partial_global_model(models, sizes)
-        d = model_distance(pm, self.ref_flat)
+        if isinstance(models, ModelBank):
+            if self.use_dist_kernel:
+                from repro.kernels.pairwise_dist.ops import dist_to_ref
+                d = float(dist_to_ref(pm[None], self._ref_device())[0])
+            else:
+                d = float(jnp.linalg.norm(pm - self._ref_device()))
+        else:
+            d = model_distance(pm, self.ref_flat)
         self.distances[orbit] = d
         if len(self.groups) < self.num_groups:
             # still building the grouping (paper: first epoch(s)) — recluster
@@ -97,6 +146,114 @@ class GroupingState:
         gi = int(np.argmin([abs(d - m) for m in means]))
         self.groups[gi].append(orbit)
         return gi
+
+    def observe_orbits(self, orbit_indices: Dict[int, List[int]],
+                       bank: ModelBank,
+                       sizes: Sequence[float]) -> Dict[int, int]:
+        """Batched ``observe_orbit`` over a whole epoch's arrivals.
+
+        ``orbit_indices``: orbit id -> row indices into ``bank``;
+        ``sizes``: per-row data sizes.  All partial global models of *new*
+        orbits are computed in ONE fused segment-sum over the stacked
+        (C, N) bank and all distances-to-w0 in one norm call — only the
+        per-orbit scalar distances reach host.  Returns orbit -> group id.
+        """
+        out: Dict[int, int] = {}
+        new_orbits = []
+        for orbit in orbit_indices:
+            gi = self.group_of(orbit)
+            if gi is not None:
+                out[orbit] = gi
+            else:
+                new_orbits.append(orbit)
+        if not new_orbits:
+            return out
+        assert self.ref_flat is not None, "set_reference(w0) first"
+        # per-model weight vectors are host metadata math; the tensor work
+        # is one fused device call either way
+        counts = [len(orbit_indices[o]) for o in new_orbits]
+        idx_all = np.concatenate([orbit_indices[o] for o in new_orbits])
+        if (len(set(counts)) == 1 and len(idx_all) == len(bank)
+                and np.array_equal(idx_all, np.arange(len(bank)))):
+            # common layout (constellation order, equal orbits): O(C*N)
+            # blocked reduction instead of the O(K*C*N) dense contraction
+            w = np.zeros(len(bank), dtype=np.float32)
+            for orbit in new_orbits:
+                idxs = orbit_indices[orbit]
+                total = float(sum(sizes[j] for j in idxs))
+                for j in idxs:
+                    w[j] = sizes[j] / total
+            ds = np.asarray(_blocked_distances(bank.stack, jnp.asarray(w),
+                                               self._ref_device(),
+                                               len(new_orbits)))
+        else:
+            W = np.zeros((len(new_orbits), len(bank)), dtype=np.float32)
+            for k, orbit in enumerate(new_orbits):
+                idxs = orbit_indices[orbit]
+                total = float(sum(sizes[j] for j in idxs))
+                for j in idxs:
+                    W[k, j] = sizes[j] / total
+            ds = np.asarray(_dense_distances(jnp.asarray(W), bank.stack,
+                                             self._ref_device()))
+        self._assign_new(new_orbits, ds, out)
+        return out
+
+    def observe_orbits_multi(self, orbit_indices: Dict[int, List[int]],
+                             segments, sizes: Sequence[float]) -> Dict[int, int]:
+        """``observe_orbits`` over models split across device matrices.
+
+        ``segments``: list of (stack (C_s, N) or None, rows) where
+        ``rows[j]`` is model j's row in that stack (-1 elsewhere) — e.g. the
+        epoch's training bank plus a small carried-stragglers matrix.  Each
+        segment contributes one fused (K,C_s)x(C_s,N) term to the partial
+        models; no rows are gathered or concatenated.
+        """
+        out: Dict[int, int] = {}
+        new_orbits = [o for o in orbit_indices if self.group_of(o) is None]
+        for o in orbit_indices:
+            if o not in new_orbits:
+                out[o] = self.group_of(o)                       # type: ignore
+        if not new_orbits:
+            return out
+        assert self.ref_flat is not None, "set_reference(w0) first"
+        totals = {o: float(sum(sizes[j] for j in orbit_indices[o]))
+                  for o in new_orbits}
+        from repro.core.aggregation import scatter_weights
+        pm = None
+        for stack, rows in segments:
+            if stack is None or stack.shape[0] == 0:
+                continue
+            W = np.stack([scatter_weights(
+                [rows[j] for j in orbit_indices[orbit]],
+                [sizes[j] / totals[orbit] for j in orbit_indices[orbit]],
+                stack.shape[0]) for orbit in new_orbits])
+            if not W.any():
+                continue
+            term = jnp.asarray(W) @ stack
+            pm = term if pm is None else pm + term
+        if pm is None:
+            return out
+        ds = np.asarray(jnp.linalg.norm(pm - self._ref_device()[None, :],
+                                        axis=1))
+        self._assign_new(new_orbits, ds, out)
+        return out
+
+    def _assign_new(self, new_orbits, ds, out: Dict[int, int]) -> None:
+        """Replay the exact sequential observe_orbit assignment logic
+        (distances enter one at a time so intermediate reclusters match)."""
+        for orbit, d in zip(new_orbits, ds):
+            self.distances[orbit] = float(d)
+            if len(self.groups) < self.num_groups:
+                self.groups = group_by_gaps(self.distances, self.num_groups)
+                out[orbit] = self.group_of(orbit)               # type: ignore
+                continue
+            means = [np.mean([self.distances[o] for o in g
+                              if o in self.distances])
+                     if any(o in self.distances for o in g) else np.inf
+                     for g in self.groups]
+            gi = int(np.argmin([abs(float(d) - m) for m in means]))
+            self.groups[gi].append(orbit)
+            out[orbit] = gi
 
     def regroup(self) -> None:
         """Re-run the gap clustering over all seen orbits (end of an epoch

@@ -14,6 +14,15 @@ epoch beta:
      staleness discounting; FedAvg barrier; per-arrival; fixed interval);
   5. evaluate  — test accuracy of the new global model at the trigger time.
 
+When the trainer exposes ``train_many_stacked`` (and
+``SimConfig.use_model_bank`` is left on), steps 2-4 run on the
+device-resident ``ModelBank`` path: local models stay one stacked (C, N)
+array from training output through grouping and aggregation — no
+per-satellite pytree unstacking, no ``device_get``; only the new global
+model is unflattened (on device) once per epoch for the evaluator and the
+next downlink.  Trainers without the stacked API (e.g. test stubs) use the
+legacy pytree path.
+
 The output is a history of (sim_time_s, epoch, accuracy, ...) rows, from
 which convergence time (time to reach a target accuracy) is read — the
 paper's Table II / Fig. 6 quantities.
@@ -23,6 +32,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation as agg
@@ -48,6 +59,7 @@ class SimConfig:
     seed: int = 0
     sync_stall_s: float = 86400.0      # cap a sync round at this (stragglers)
     link: Optional[LinkModel] = None   # None -> paper Table I RF (16 Mb/s)
+    use_model_bank: bool = True        # stacked path when trainer supports it
 
 
 @dataclasses.dataclass
@@ -77,33 +89,58 @@ class FLSimulation:
         self.orbit_ids = self.constellation.orbit_ids()
         # persistent per-satellite bookkeeping
         self.last_epoch_included: Dict[int, int] = {}
-        self.pending: List[tuple] = []    # (arrival_t, sat, params, trained_from_epoch)
+        # legacy path: (arrival_t, sat, host pytree, trained_from_epoch)
+        self.pending: List[tuple] = []
+        # stacked path: stragglers live in a small host matrix (O(late)
+        # rows, not O(S)) and re-enter aggregation as their own fused term
+        self._pend_np: Optional[np.ndarray] = None       # (L, N) float32
+        self._pend_meta: List[tuple] = []      # (arrival_t, sat, epoch)
+        self._spec = None              # FlatSpec of the stacked path
 
     # ------------------------------------------------------------------
 
     def _downlink(self, t0: float, bits: float, source: int) -> np.ndarray:
         if self.spec.use_isl:
             return self.prop.downlink_times(t0, bits, source)
-        # no ISL: each satellite waits for direct visibility
+        # no ISL: each satellite waits for direct visibility (vectorized)
         S = self.constellation.num_sats
+        sats = np.arange(S)
+        tv, ps = self.timeline.next_visible_after(sats, t0)
         recv = np.full(S, np.inf)
-        for s in range(S):
-            tv = self.timeline.next_visible_time(s, t0)
-            if tv is not None:
-                ps = self.topo.visible_ps_of(s, tv)
-                h = ps[0] if ps else 0
-                recv[s] = tv + self.prop.sat_ps_delay(bits, s, h, tv)
+        ok = np.isfinite(tv)
+        for h in np.unique(ps[ok]):
+            m = ok & (ps == h)
+            d = self.topo.sat_ps_distances(sats[m], int(h), tv[m])
+            recv[m] = tv[m] + self.prop.link.total_delay(bits, d)
         return recv
 
-    def _uplink(self, sat: int, t_done: float, bits: float, sink: int):
+    def _uplink_many(self, sats, t_done, bits: float, sink: int):
         if self.spec.use_isl:
-            return self.prop.uplink(sat, t_done, bits, sink)
-        tv = self.timeline.next_visible_time(sat, t_done)
-        if tv is None:
-            return np.inf, -1
-        ps = self.topo.visible_ps_of(sat, tv)
-        h = ps[0] if ps else 0
-        return tv + self.prop.sat_ps_delay(bits, sat, h, tv), h
+            return self.prop.uplink_many(sats, t_done, bits, sink)
+        sats = np.asarray(sats, dtype=np.int64)
+        tv, ps = self.timeline.next_visible_after(sats, t_done)
+        out = np.full(len(sats), np.inf)
+        hap = np.asarray(ps, dtype=np.int64)
+        ok = np.isfinite(tv)
+        for h in np.unique(hap[ok]):
+            m = ok & (hap == h)
+            d = self.topo.sat_ps_distances(sats[m], int(h), tv[m])
+            out[m] = tv[m] + self.prop.link.total_delay(bits, d)
+        return out, hap
+
+    def _combine(self, segments, weights, base_flat, base_weight: float):
+        """Map metas-indexed ``weights`` onto per-segment weight vectors and
+        run the fused stacked combination (host bookkeeping + one
+        contraction per segment)."""
+        terms = []
+        for stack, rows in segments:
+            if stack is None or stack.shape[0] == 0:
+                continue
+            terms.append((stack,
+                          agg.scatter_weights(rows, weights, stack.shape[0])))
+        out = agg.combine_stacked(terms, base_flat, base_weight,
+                                  use_kernel=self.spec.use_agg_kernel)
+        return base_flat if out is None else out
 
     # ------------------------------------------------------------------
 
@@ -112,7 +149,10 @@ class FLSimulation:
         sim, spec = self.sim, self.spec
         bits = model_bits(w0)
         self.grouping.set_reference(w0)
-        w = w0
+        stacked = sim.use_model_bank and hasattr(self.trainer,
+                                                 "train_many_stacked")
+        w_tree = w0                       # pytree view (trainer/evaluator)
+        w_flat = None                     # flat device view (stacked path)
         t = 0.0
         source = 0
         history: List[EpochRecord] = []
@@ -126,17 +166,27 @@ class FLSimulation:
 
             # local training (real JAX, one batched call) + uplink timing
             participants = [s for s in range(S) if np.isfinite(recv[s])]
-            trained, _losses = (self.trainer.train_many(
-                participants, w, seed=sim.seed * 1000 + beta)
-                if participants else ([], []))
-            arrivals = []                       # (t_arr, sat, params)
-            for s, params_s in zip(participants, trained):
-                t_done = recv[s] + sim.train_time_s
-                t_arr, _hap = self._uplink(s, t_done, bits, sink)
-                if np.isfinite(t_arr):
-                    arrivals.append((t_arr, s, params_s))
-            arrivals.sort(key=lambda a: a[0])
-            if not arrivals and not self.pending:
+            bank = None
+            if participants:
+                if stacked:
+                    bank, _losses = self.trainer.train_many_stacked(
+                        participants, w_tree, seed=sim.seed * 1000 + beta)
+                    self._spec = bank.spec
+                    trained = range(len(participants))   # row indices
+                else:
+                    trained, _losses = self.trainer.train_many(
+                        participants, w_tree, seed=sim.seed * 1000 + beta)
+                t_done = recv[participants] + sim.train_time_s
+                t_arr_vec, _haps = self._uplink_many(participants, t_done,
+                                                     bits, sink)
+                arrivals = [(float(t_arr_vec[k]), s, payload)
+                            for k, (s, payload)
+                            in enumerate(zip(participants, trained))
+                            if np.isfinite(t_arr_vec[k])]
+                arrivals.sort(key=lambda a: a[0])
+            else:
+                arrivals = []
+            if not arrivals and not self.pending and not self._pend_meta:
                 break
 
             # ---- aggregation trigger --------------------------------------
@@ -155,66 +205,174 @@ class FLSimulation:
                 late = [a for a in arrivals if a[0] > t_agg]
 
             # models stuck from previous epochs arrive as stale candidates
-            carried = [(ta, s, p, ep) for (ta, s, p, ep) in self.pending
-                       if ta <= t_agg]
-            self.pending = [x for x in self.pending if x[0] > t_agg]
-            self.pending.extend((ta, s, p, beta) for (ta, s, p) in late)
+            metas = [SatelliteMeta(s, self.trainer.data_size(s),
+                                   loc=(0.0, 0.0), ts=ta, epoch=beta)
+                     for (ta, s, _p) in used]
+            segments = None
+            if stacked:
+                c_idx = [i for i, (ta, _s, _ep) in enumerate(self._pend_meta)
+                         if ta <= t_agg]
+                k_idx = [i for i in range(len(self._pend_meta))
+                         if i not in c_idx]
+                metas += [SatelliteMeta(s, self.trainer.data_size(s),
+                                        loc=(0.0, 0.0), ts=ta, epoch=ep)
+                          for (ta, s, ep) in (self._pend_meta[i]
+                                              for i in c_idx)]
+                # row bookkeeping instead of row gathers: metas index j maps
+                # to a row of the intact epoch bank or the carried matrix
+                bank_rows = ([k for (_, _, k) in used]
+                             + [-1] * len(c_idx))
+                carry_rows = [-1] * len(used) + list(range(len(c_idx)))
+                carry_np = (self._pend_np[np.asarray(c_idx)]
+                            if c_idx else None)
+                # retire carried stragglers, enqueue this epoch's late rows
+                # (bucketed gather + one small device_get — O(late), not O(S))
+                keep_np = (self._pend_np[np.asarray(k_idx)]
+                           if k_idx else None)
+                keep_meta = [self._pend_meta[i] for i in k_idx]
+                if late:
+                    from repro.core.modelbank import (gather_rows,
+                                                      pad_bucket_ids)
+                    lk, n_late = pad_bucket_ids([k for (_, _, k) in late])
+                    late_np = np.asarray(jax.device_get(
+                        gather_rows(bank.stack, lk)))[:n_late]
+                    keep_np = (late_np if keep_np is None else
+                               np.concatenate([keep_np, late_np]))
+                    keep_meta += [(ta, s, beta) for (ta, s, _k) in late]
+                self._pend_np, self._pend_meta = keep_np, keep_meta
 
-            models, metas = [], []
-            for (ta, s, p) in used:
-                models.append(p)
-                metas.append(SatelliteMeta(s, self.trainer.data_size(s),
-                                           loc=(0.0, 0.0), ts=ta, epoch=beta))
-            for (ta, s, p, ep) in carried:
-                models.append(p)
-                metas.append(SatelliteMeta(s, self.trainer.data_size(s),
-                                           loc=(0.0, 0.0), ts=ta, epoch=ep))
-            models, metas = agg.dedup(models, metas)
+                keep = agg.dedup_indices(metas)
+                if len(keep) < len(metas):
+                    metas = [metas[i] for i in keep]
+                    bank_rows = [bank_rows[i] for i in keep]
+                    carry_rows = [carry_rows[i] for i in keep]
+                carry_dev = (jnp.asarray(carry_np)
+                             if carry_np is not None
+                             and any(r >= 0 for r in carry_rows) else None)
+                segments = [(bank.stack if bank is not None else None,
+                             bank_rows), (carry_dev, carry_rows)]
+                models = None
+            else:
+                carried = [(ta, s, p, ep) for (ta, s, p, ep) in self.pending
+                           if ta <= t_agg]
+                self.pending = [x for x in self.pending if x[0] > t_agg]
+                self.pending.extend((ta, s, p, beta) for (ta, s, p) in late)
+                metas += [SatelliteMeta(s, self.trainer.data_size(s),
+                                        loc=(0.0, 0.0), ts=ta, epoch=ep)
+                          for (ta, s, _p, ep) in carried]
+                models = ([p for (_, _, p) in used]
+                          + [p for (_, _, p, _) in carried])
+                models, metas = agg.dedup(models, metas)
+            if stacked and w_flat is None:
+                w_flat = self._spec.flatten(w_tree) if self._spec else None
+            base = w_flat if stacked else w_tree
 
             # ---- aggregate -------------------------------------------------
+            # per-model weights are host metadata math in every mode; on the
+            # stacked path the tensor update is a couple of fused per-segment
+            # contractions (epoch bank + carried stragglers), no row copies
             info = {"gamma": 1.0, "stale_groups": 0}
+            n_meta = len(metas)
             if spec.agg_mode == "fedavg":
-                w = agg.fedavg(models, [m.size for m in metas],
-                               use_kernel=spec.use_agg_kernel)
+                if stacked:
+                    total = float(sum(m.size for m in metas))
+                    ws = np.array([m.size / total for m in metas])
+                    w_new = self._combine(segments, ws, None, 0.0)
+                else:
+                    w_new = agg.fedavg(models, [m.size for m in metas],
+                                       use_kernel=spec.use_agg_kernel)
             elif spec.agg_mode == "per_arrival":
-                for m_i, meta in zip(models, metas):
-                    alpha = 0.5 / (1.0 + max(beta - meta.epoch, 0))
-                    w = agg.weighted_sum([m_i], [alpha], base=w,
-                                         base_weight=1.0 - alpha)
+                if stacked:
+                    # closed form of the sequential EMA: model i keeps
+                    # alpha_i * prod_{j>i} (1 - alpha_j)
+                    alphas = [0.5 / (1.0 + max(beta - m.epoch, 0))
+                              for m in metas]
+                    ws = np.zeros(n_meta)
+                    bw = 1.0
+                    for i in reversed(range(n_meta)):
+                        ws[i] = alphas[i] * (1.0 if i == n_meta - 1 else
+                                             ws[i + 1] / alphas[i + 1]
+                                             * (1.0 - alphas[i + 1]))
+                    for i in range(n_meta):
+                        bw *= 1.0 - alphas[i]
+                    w_new = self._combine(segments, ws, base, bw)
+                else:
+                    w_new = base
+                    for m_i, meta in zip(models, metas):
+                        alpha = 0.5 / (1.0 + max(beta - meta.epoch, 0))
+                        w_new = agg.weighted_sum([m_i], [alpha], base=w_new,
+                                                 base_weight=1.0 - alpha)
             elif spec.agg_mode == "interval":
                 total = sum(m.size for m in metas)
                 raw = np.array([m.size * (1.0 / (1.0 + max(beta - m.epoch, 0)))
                                 for m in metas])
                 gam = float(np.clip(raw.sum() / max(total, 1e-9), 0.2, 1.0))
-                w = agg.weighted_sum(models, gam * raw / raw.sum(), base=w,
-                                     base_weight=1.0 - gam)
+                if stacked:
+                    w_new = self._combine(segments, gam * raw / raw.sum(),
+                                          base, 1.0 - gam)
+                else:
+                    w_new = agg.weighted_sum(models, gam * raw / raw.sum(),
+                                             base=base, base_weight=1.0 - gam)
                 t_agg = max(t_agg, t + spec.interval_s)
                 info["gamma"] = gam
             else:                                        # asyncfleo (Alg. 2)
                 groups: Dict[int, List[int]] = {}
                 if not spec.grouping:                    # ablation: one group
                     groups[0] = list(range(len(metas)))
+                elif stacked:
+                    # batched: all new-orbit partial models + distances in
+                    # fused per-segment contractions over the bank
+                    orbit_indices: Dict[int, List[int]] = {}
+                    for i, meta in enumerate(metas):
+                        orbit_indices.setdefault(
+                            int(self.orbit_ids[meta.sat_id]), []).append(i)
+                    orbit_group = self.grouping.observe_orbits_multi(
+                        orbit_indices, segments, [m.size for m in metas])
+                    for i, meta in enumerate(metas):
+                        gi = orbit_group[int(self.orbit_ids[meta.sat_id])]
+                        groups.setdefault(gi, []).append(i)
                 else:
                     for i, meta in enumerate(metas):
                         orbit = int(self.orbit_ids[meta.sat_id])
-                        same_orbit = [j for j, mm in enumerate(metas)
-                                      if int(self.orbit_ids[mm.sat_id]) == orbit]
-                        gi = self.grouping.observe_orbit(
-                            orbit, [models[j] for j in same_orbit],
-                            [metas[j].size for j in same_orbit])
+                        gi = self.grouping.group_of(orbit)
+                        if gi is None:     # first sighting: distance to w0
+                            same_orbit = [j for j, mm in enumerate(metas)
+                                          if int(self.orbit_ids[mm.sat_id])
+                                          == orbit]
+                            gi = self.grouping.observe_orbit(
+                                orbit, [models[j] for j in same_orbit],
+                                [metas[j].size for j in same_orbit])
                         groups.setdefault(gi, [])
                         if i not in groups[gi]:
                             groups[gi].append(i)
-                w, info = agg.asyncfleo_aggregate(
-                    w, groups, models, metas, beta,
-                    strict_paper_eq14=spec.strict_paper_eq14,
-                    use_kernel=spec.use_agg_kernel)
+                if stacked:
+                    selected, wsel, gamma, info = agg.asyncfleo_weights(
+                        groups, metas, beta,
+                        strict_paper_eq14=spec.strict_paper_eq14)
+                    if selected:
+                        ws = np.zeros(n_meta)
+                        ws[selected] = wsel
+                        w_new = self._combine(segments, ws, base, 1.0 - gamma)
+                    else:
+                        w_new = base
+                else:
+                    w_new, info = agg.asyncfleo_aggregate(
+                        base, groups, models, metas, beta,
+                        strict_paper_eq14=spec.strict_paper_eq14,
+                        use_kernel=spec.use_agg_kernel)
+
+            if stacked:
+                w_flat = (w_new if getattr(w_new, "ndim", None) == 1
+                          else self._spec.flatten(w_new))
+                w_tree = self._spec.unflatten(w_flat)    # device, 1x/epoch
+            else:
+                w_tree = w_new
 
             for meta in metas:
                 self.last_epoch_included[meta.sat_id] = beta
 
-            acc = float(self.evaluator(w)) if self.evaluator else float("nan")
-            history.append(EpochRecord(beta, t_agg, acc, len(models),
+            acc = float(self.evaluator(w_tree)) if self.evaluator else float("nan")
+            history.append(EpochRecord(beta, t_agg, acc, len(metas),
                                        float(info.get("gamma", 1.0)),
                                        int(info.get("stale_groups", 0))))
             t = t_agg

@@ -41,9 +41,19 @@ class RingOfStars:
         H = self.num_ps
         return (source + H // 2) % H if H > 1 else source
 
-    def ihl_distance(self, a: int, b: int, t: float) -> float:
-        return float(np.linalg.norm(self.nodes[a].position(t)
-                                    - self.nodes[b].position(t)))
+    def ring_path(self, src: int, dst: int) -> List[int]:
+        """HAP ids along the shorter ring arc src -> dst, endpoints
+        included (ties broken toward increasing id)."""
+        H = self.num_ps
+        fwd = (dst - src) % H
+        step, hops = (1, fwd) if fwd <= H - fwd else (-1, H - fwd)
+        return [(src + i * step) % H for i in range(hops + 1)]
+
+    def ihl_distance(self, a: int, b: int, t):
+        """HAP a <-> b distance; ``t`` may be scalar or an array of times."""
+        d = np.linalg.norm(self.nodes[a].position(t)
+                           - self.nodes[b].position(t), axis=-1)
+        return float(d) if np.ndim(t) == 0 else d
 
     # ---- stars --------------------------------------------------------------
 
@@ -73,6 +83,12 @@ class RingOfStars:
         d = abs(a % N - b % N)
         return min(d, N - d)
 
+    def isl_ring_distance_matrix(self) -> np.ndarray:
+        """(N, N) intra-orbit hop distances — identical for every orbit."""
+        N = self.constellation.sats_per_orbit
+        d = np.abs(np.arange(N)[:, None] - np.arange(N)[None, :])
+        return np.minimum(d, N - d)
+
     def isl_chord_m(self) -> float:
         """Distance between ring-adjacent satellites (constant for circular
         equally-spaced orbits)."""
@@ -82,3 +98,12 @@ class RingOfStars:
     def sat_ps_distance(self, sat: int, ps: int, t: float) -> float:
         sp = self.constellation.positions(t)[sat]
         return float(np.linalg.norm(sp - self.nodes[ps].position(t)))
+
+    def sat_ps_distances(self, sats, ps: int, t) -> np.ndarray:
+        """Distances of the given satellites to one PS; ``t`` scalar or
+        per-satellite (P,).  Vectorized — no full-constellation positions."""
+        sats = np.atleast_1d(np.asarray(sats, dtype=np.int64))
+        t_arr = np.broadcast_to(np.asarray(t, dtype=np.float64), sats.shape)
+        sp = self.constellation.positions_at(sats, t_arr)       # (P,3)
+        gp = self.nodes[ps].position(t_arr)                     # (P,3)
+        return np.linalg.norm(sp - np.atleast_2d(gp), axis=-1)

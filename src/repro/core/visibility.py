@@ -96,6 +96,34 @@ class VisibilityTimeline:
             return None
         return float(self.times[ti + hits[0]])
 
+    def _next_visible_grid(self) -> np.ndarray:
+        """(T, S) int32: for each (time step, sat), the earliest row >= t
+        where the satellite sees any PS (== T when never again).  Built once
+        by a reverse running-minimum over the visibility grid and cached —
+        it turns every next-visible query into one fancy-index lookup."""
+        if not hasattr(self, "_nxt"):
+            T = self.grid.shape[0]
+            any_ps = self.grid.any(axis=2)                      # (T, S)
+            idx = np.where(any_ps, np.arange(T, dtype=np.int32)[:, None],
+                           np.int32(T))
+            self._nxt = np.minimum.accumulate(idx[::-1], axis=0)[::-1]
+        return self._nxt
+
+    def next_visible_after(self, sats, t):
+        """Vectorized ``next_visible_time`` over (sat, per-sat time) pairs.
+        Returns (times (P,), first-visible PS (P,)) with inf / -1 where a
+        satellite is never visible again within the horizon."""
+        sats = np.atleast_1d(np.asarray(sats, dtype=np.int64))
+        t = np.broadcast_to(np.asarray(t, dtype=np.float64), sats.shape)
+        ti = np.clip(np.round(t / self.dt_s).astype(np.int64), 0,
+                     len(self.times) - 1)
+        row = self._next_visible_grid()[ti, sats]
+        ok = row < self.grid.shape[0]
+        rowc = np.minimum(row, self.grid.shape[0] - 1)
+        times = np.where(ok, self.times[rowc], np.inf)
+        ps = np.where(ok, np.argmax(self.grid[rowc, sats, :], axis=1), -1)
+        return times, ps
+
     def next_orbit_visible(self, orbit_sats: Sequence[int], t: float):
         """Earliest (time, sat) at/after t when any satellite of an orbit sees
         any PS.  Returns (None, None) if never."""

@@ -4,20 +4,43 @@ Each satellite trains the received global model for J local SGD iterations on
 its own shard.  ``ImageClassifierPool`` is the paper's workload (CNN/MLP on
 image classification); ``LMPool`` trains transformer LMs (our LLM-scale
 federated examples).  Training is jitted once and reused across satellites.
+
+Both pools expose two result forms:
+
+* ``train_many_stacked`` — the fast path: one jitted vmap over the whole
+  participant set, returning a device-resident ``ModelBank`` (stacked
+  ``(C, N)`` float32, see DESIGN.md §2).  Participant counts are padded up
+  to power-of-two buckets so a changing number of participants hits at most
+  O(log S) traces instead of one per distinct count.
+* ``train_many`` — legacy form materializing per-satellite host pytrees
+  (one ``device_get``); kept for callers that need pytrees.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_models import SmallNetConfig
+from repro.core.modelbank import (FlatSpec, ModelBank, gather_rows,
+                                  pad_bucket_ids)
 from repro.models import cnn
 from repro.optim import sgd, apply_updates
+
+# participant-count bucketing (padded rows trained and discarded) so a
+# changing participant set retraces the jitted vmap O(log S) times
+_pad_ids = pad_bucket_ids
+
+
+def _empty_bank(params) -> Tuple[ModelBank, np.ndarray]:
+    """Zero-participant result (legacy pools returned ([], []))."""
+    spec = FlatSpec.of(params)
+    return (ModelBank(spec, jnp.zeros((0, spec.num_params), jnp.float32)),
+            np.zeros(0))
 
 
 @dataclasses.dataclass
@@ -64,17 +87,26 @@ class ImageClassifierPool:
     def data_size(self, sat: int) -> int:
         return int(self._true_sizes[sat])
 
-    def train_many(self, sat_ids: Sequence[int], params, seed: int):
+    def train_many_stacked(self, sat_ids: Sequence[int], params, seed: int):
         """Train the given satellites from the same global model in one
-        batched call.  Returns (list of per-sat param pytrees, losses)."""
-        ids = jnp.asarray(list(sat_ids))
+        batched call.  Returns (ModelBank of per-sat models — stacked (C, N)
+        on device, no host copy — and host losses (C,))."""
+        ids_np, n = _pad_ids(sat_ids)
+        if n == 0:
+            return _empty_bank(params)
+        ids = jnp.asarray(ids_np)
         keys = jax.vmap(lambda s: jax.random.PRNGKey(
             (np.uint32(seed) * np.uint32(9973)) + s.astype(jnp.uint32)))(ids)
-        stacked, losses = self._train_many(params, self._imgs[ids],
-                                           self._labs[ids], keys)
-        stacked = jax.device_get(stacked)
-        outs = [jax.tree.map(lambda a: a[i], stacked) for i in range(len(ids))]
-        return outs, np.asarray(losses)
+        stacked, losses = self._train_many(params,
+                                           gather_rows(self._imgs, ids),
+                                           gather_rows(self._labs, ids), keys)
+        bank = ModelBank.from_stacked_tree(stacked)
+        return ModelBank(bank.spec, bank.stack[:n]), np.asarray(losses)[:n]
+
+    def train_many(self, sat_ids: Sequence[int], params, seed: int):
+        """Legacy form: (list of per-sat host param pytrees, losses)."""
+        bank, losses = self.train_many_stacked(sat_ids, params, seed)
+        return bank.to_pytrees(), losses
 
     def train(self, sat: int, params, seed: int):
         outs, losses = self.train_many([sat], params, seed)
@@ -97,7 +129,13 @@ class Evaluator:
 
 @dataclasses.dataclass
 class LMPool:
-    """Federated LM pretraining pool (tokens partitioned across satellites)."""
+    """Federated LM pretraining pool (tokens partitioned across satellites).
+
+    Shards are truncated to a common sequence count so the whole participant
+    set trains in one jitted vmap (like ``ImageClassifierPool``) — the
+    per-satellite loop of the seed retraced ``_train`` whenever a shard's
+    token count differed.
+    """
     model_cfg: object                  # ModelConfig
     tokens: np.ndarray                 # (N_seqs, seq_len)
     shards: List[np.ndarray]
@@ -110,9 +148,13 @@ class LMPool:
         from repro.optim import adamw
         opt = adamw(self.lr)
         cfg = self.model_cfg
+        self._true_sizes = [len(s) for s in self.shards]
+        m = min(self._true_sizes)                     # equalize for vmap
+        self._sel = np.stack([s[:m] for s in self.shards])  # (S, m)
+        # tokens stay host-side: only the participants' shards are put on
+        # device per call (an LLM-scale corpus must not live in HBM)
 
-        @jax.jit
-        def _train(params, toks, key):
+        def _train_one(params, toks, key):
             state = opt.init(params)
             n = toks.shape[0]
 
@@ -128,26 +170,32 @@ class LMPool:
             (params, _), losses = jax.lax.scan(step, (params, state), keys)
             return params, losses.mean()
 
-        self._train = _train
+        self._train_many = jax.jit(jax.vmap(_train_one, in_axes=(None, 0, 0)))
 
     @property
     def num_clients(self) -> int:
         return len(self.shards)
 
     def data_size(self, sat: int) -> int:
-        return int(len(self.shards[sat]))
+        return int(self._true_sizes[sat])
+
+    def train_many_stacked(self, sat_ids: Sequence[int], params, seed: int):
+        """One batched call over the participant set -> (ModelBank, losses)."""
+        ids_np, n = _pad_ids(sat_ids)
+        if n == 0:
+            return _empty_bank(params)
+        ids = jnp.asarray(ids_np)
+        keys = jax.vmap(lambda s: jax.random.PRNGKey(
+            np.uint32(seed) * np.uint32(7919) + s.astype(jnp.uint32)))(ids)
+        toks = jnp.asarray(self.tokens[self._sel[ids_np]])
+        stacked, losses = self._train_many(params, toks, keys)
+        bank = ModelBank.from_stacked_tree(stacked)
+        return ModelBank(bank.spec, bank.stack[:n]), np.asarray(losses)[:n]
+
+    def train_many(self, sat_ids: Sequence[int], params, seed: int):
+        bank, losses = self.train_many_stacked(sat_ids, params, seed)
+        return bank.to_pytrees(), losses
 
     def train(self, sat: int, params, seed: int):
-        sel = self.shards[sat]
-        toks = jnp.asarray(self.tokens[sel])
-        key = jax.random.PRNGKey(np.uint32(seed * 7919 + sat))
-        new_params, loss = self._train(params, toks, key)
-        return jax.device_get(new_params), float(loss)
-
-    def train_many(self, sat_ids, params, seed: int):
-        outs, losses = [], []
-        for s in sat_ids:
-            p, l = self.train(int(s), params, seed)
-            outs.append(p)
-            losses.append(l)
-        return outs, np.asarray(losses)
+        outs, losses = self.train_many([sat], params, seed)
+        return outs[0], float(losses[0])

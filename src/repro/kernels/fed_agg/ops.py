@@ -22,6 +22,22 @@ def fed_agg(stack, gamma, base=None, base_weight: float = 0.0, *,
     return fed_agg_flat(stack, gamma, base, base_weight, interpret=interpret)
 
 
+def fed_agg_bank(bank, gamma, base=None, base_weight: float = 0.0, *,
+                 interpret: Optional[bool] = None):
+    """Aggregate a device-resident ``ModelBank`` in one kernel pass.
+
+    ``bank.stack`` is already the kernel's native (C, N) layout, so unlike
+    :func:`fed_agg_pytree` there is no per-model flatten: the stack goes
+    straight to the fused reduction.  ``base`` may be a flat (N,) vector or a
+    pytree (flattened once via the bank's spec).  Returns the flat (N,)
+    aggregated model; use ``bank.spec.unflatten`` to materialize a pytree.
+    """
+    from repro.core.modelbank import flat_base
+    return fed_agg(bank.stack, jnp.asarray(gamma, jnp.float32),
+                   flat_base(bank.spec, base), base_weight,
+                   interpret=interpret)
+
+
 def fed_agg_pytree(models: Sequence, gamma: np.ndarray, base=None,
                    base_weight: float = 0.0, *,
                    interpret: Optional[bool] = None):

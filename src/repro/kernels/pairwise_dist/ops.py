@@ -19,6 +19,25 @@ def pairwise_dist(x, *, squared: bool = False,
     return d2 if squared else jnp.sqrt(d2)
 
 
+def dist_to_ref(stack, ref, *, squared: bool = False,
+                interpret: Optional[bool] = None):
+    """L2 distance of each row of a stacked (M, N) model bank to one (N,)
+    reference vector (the grouping step's distance-to-w0, paper Fig. 5b).
+
+    Small M (grouping-scale: a handful of orbits) routes through the
+    pairwise kernel by prepending ``ref`` as row 0 of one (M+1, N) pass;
+    the kernel's (M+1)^2 Gram work is negligible there.  Larger stacks use
+    a direct O(M*N) row-wise reduction instead.
+    """
+    stack = jnp.asarray(stack, jnp.float32)
+    ref = jnp.asarray(ref, jnp.float32)
+    if stack.shape[0] > 64:
+        d2 = jnp.sum((stack - ref[None, :]) ** 2, axis=1)
+        return d2 if squared else jnp.sqrt(d2)
+    x = jnp.concatenate([ref[None], stack], axis=0)
+    return pairwise_dist(x, squared=squared, interpret=interpret)[0, 1:]
+
+
 def model_pairwise_dist(models: Sequence, *, interpret: Optional[bool] = None):
     flat = jnp.stack([
         jnp.concatenate([jnp.ravel(l).astype(jnp.float32)
