@@ -242,6 +242,54 @@ def asyncfleo_weights(groups: Dict[int, List[int]],
     return selected, weights, gamma, info
 
 
+def epoch_weight_vector(agg_mode: str, metas: List[SatelliteMeta],
+                        beta: int, groups: Optional[Dict[int, List[int]]],
+                        *, strict_paper_eq14: bool = False):
+    """Per-model weight vector + base weight for one epoch's update —
+    pure host metadata math shared by the stacked and fused simulator
+    paths (the fused epoch program takes the result as an input,
+    DESIGN.md §6).  Returns (ws (n_meta,), base_weight, info).
+
+    ``agg_mode``: "fedavg" (eq. 4), "per_arrival" (FedSat-style EMA,
+    closed form), "interval" (FedSpace emulation, DESIGN.md §3), anything
+    else -> AsyncFLEO Alg. 2 selection + eqs. 13/14 over ``groups``.
+    """
+    n_meta = len(metas)
+    info = {"gamma": 1.0, "stale_groups": 0}
+    if n_meta == 0:
+        return np.zeros(0), 1.0, info
+    if agg_mode == "fedavg":
+        total = float(sum(m.size for m in metas))
+        return np.array([m.size / total for m in metas]), 0.0, info
+    if agg_mode == "per_arrival":
+        # closed form of the sequential EMA: model i keeps
+        # alpha_i * prod_{j>i} (1 - alpha_j)
+        alphas = [0.5 / (1.0 + max(beta - m.epoch, 0)) for m in metas]
+        ws = np.zeros(n_meta)
+        bw = 1.0
+        for i in reversed(range(n_meta)):
+            ws[i] = alphas[i] * (1.0 if i == n_meta - 1 else
+                                 ws[i + 1] / alphas[i + 1]
+                                 * (1.0 - alphas[i + 1]))
+        for i in range(n_meta):
+            bw *= 1.0 - alphas[i]
+        return ws, bw, info
+    if agg_mode == "interval":
+        total = sum(m.size for m in metas)
+        raw = np.array([m.size * (1.0 / (1.0 + max(beta - m.epoch, 0)))
+                        for m in metas])
+        gam = float(np.clip(raw.sum() / max(total, 1e-9), 0.2, 1.0))
+        info["gamma"] = gam
+        return gam * raw / raw.sum(), 1.0 - gam, info
+    selected, wsel, gamma, info = asyncfleo_weights(
+        groups, metas, beta, strict_paper_eq14=strict_paper_eq14)
+    ws = np.zeros(n_meta)
+    if selected:
+        ws[selected] = wsel
+        return ws, 1.0 - gamma, info
+    return ws, 1.0, info
+
+
 def asyncfleo_aggregate(w_prev, groups: Dict[int, List[int]], models,
                         metas: List[SatelliteMeta], beta: int, *,
                         strict_paper_eq14: bool = False,

@@ -1,0 +1,239 @@
+"""One fused, buffer-donated device program per simulated epoch.
+
+PR 1 made the server tensor work device-resident, but the epoch hot path
+still issued a *chain* of small dispatches — the training vmap, a flatten,
+per-segment grouping contractions, per-segment aggregation contractions, an
+unflatten — with host sync points in between (``np.asarray(losses)``, the
+blocking evaluator).  On CPU that chain is dominated by dispatch overhead;
+on accelerators it wastes the async queue.
+
+``EpochStepProgram`` fuses the whole epoch into ONE jitted XLA program
+(DESIGN.md §6):
+
+    in :  w_flat (N,) [donated], carry (L, N) stragglers, per-participant
+          batch inputs, participant ids, epoch seed, aggregation weight
+          vectors over bank/carry rows, base weight, new-orbit partial-
+          model row weights + segment ids, grouping reference (N,)
+    out:  new_w_flat (N,), bank stack (C, N), new-orbit distances (K,),
+          per-participant losses (C,)
+
+Inside the program: ``w_flat`` is unflattened (on device), the pool's
+training vmap runs over the participant axis, the trained stack is formed,
+the new global model is one ``base_w * w + wv_bank @ stack +
+wv_carry @ carry`` contraction, and grouping distances for new orbits are
+``|| segment_sum(w_row * rows) - ref ||`` over the same stack — a
+segment-sum rather than a dense (K, C) GEMM because each bank row feeds at
+most one new orbit (O(C*N), not O(K*C*N); at S=1000 with 125 fresh orbits
+that is a 125x FLOP difference).  Because every per-model
+weight is host *metadata* math (eqs. 13/14 need sizes/staleness, not
+tensors), the weight vectors are program inputs — the one case where they
+depend on a tensor result (a *new* orbit arriving while *stale* models are
+pending, so group membership depends on this epoch's distances) falls back
+to two dispatches (train+distances, then the contraction), counted in
+``fallback_dispatches``.
+
+``donate_argnums`` donates the global model buffer so XLA writes the new
+global model into it in place — the simulator never touches the donated
+buffer again.  The carried-stragglers matrix is NOT donated: it has no
+same-shape output for XLA to reuse (donating it only triggers the
+"unusable donation" warning), and keeping it alive lets the rare
+two-dispatch fallback contract over it without a re-gather.
+
+Mesh-awareness: with a ``jax.sharding.Mesh`` carrying a ``"data"`` axis,
+the (C, N) bank and the participant batch shard their leading axis over
+"data" (``NamedSharding``), and the bank contraction runs as an explicit
+``shard_map`` psum so multi-device hosts scale the participant dimension.
+A single-device (identity) mesh — or ``mesh=None`` — leaves every shape
+and result bit-identical to the unsharded path, keeping CPU tests
+unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.modelbank import FlatSpec
+
+# Straggler matrices are padded up to at least this many rows so the fused
+# program keeps one trace across the common 0..4-straggler epochs.
+CARRY_MIN_ROWS = 4
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def carry_capacity(n: int) -> int:
+    """Row capacity for a carried-stragglers matrix of ``n`` live rows."""
+    return max(CARRY_MIN_ROWS, next_pow2(max(n, 1)))
+
+
+def _data_axis_size(mesh: Optional[Mesh]) -> int:
+    if mesh is None or "data" not in mesh.axis_names:
+        return 1
+    return int(dict(zip(mesh.axis_names, mesh.devices.shape))["data"])
+
+
+def bank_sharding(mesh: Mesh) -> NamedSharding:
+    """The (C, N) bank layout: participants over "data", params replicated
+    (the shared rule lives in ``launch/sharding.py``)."""
+    from repro.launch.sharding import bank_sharding as _bs
+    return _bs(mesh)
+
+
+def sharded_contract(w: jnp.ndarray, stack: jnp.ndarray,
+                     mesh: Mesh) -> jnp.ndarray:
+    """(C,) @ (C, N) with the C axis sharded over "data": each device
+    contracts its local rows, one psum combines the partials."""
+    from repro.shard_compat import shard_map
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P("data"), P("data", None)),
+                       out_specs=P(None), check_vma=False)
+    def _contract(w_loc, s_loc):
+        return jax.lax.psum(w_loc @ s_loc, "data")
+
+    return _contract(w, stack)
+
+
+def _constrain_batch(inputs, mesh: Mesh, ndata: int):
+    """Shard every batch leaf's leading (participant) axis over "data"."""
+    def _c(leaf):
+        if getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] % ndata == 0:
+            spec = P("data", *([None] * (leaf.ndim - 1)))
+            return jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(mesh, spec))
+        return leaf
+    return jax.tree.map(_c, inputs)
+
+
+@dataclasses.dataclass
+class EpochStepProgram:
+    """The per-epoch fused program for one (FlatSpec, trainer) pair.
+
+    ``train_fn(params, inputs, ids, seed) -> (stacked_models, losses)`` must
+    be traceable; ``stacked_models`` is either a pytree whose leaves carry a
+    leading participant axis (a vmap output) or already a flat (C, N) stack.
+    """
+    spec: FlatSpec
+    train_fn: Callable[..., Tuple[Any, jnp.ndarray]]
+    mesh: Optional[Mesh] = None
+    donate: bool = True
+
+    dispatches: int = 0                # fused one-dispatch epochs
+    fallback_dispatches: int = 0       # epochs that needed train+agg split
+
+    def __post_init__(self):
+        donate = (0,) if self.donate else ()
+        self._step = jax.jit(self._trace, donate_argnums=donate,
+                             static_argnums=(10, 11))
+
+    # ---- traced body -------------------------------------------------------
+
+    def _trace(self, w_flat, carry, inputs, ids, seed,
+               wv_bank, wv_carry, base_w, dw_row, dw_seg, kpad,
+               blocked_m, dw_carry, ref):
+        mesh, ndata = self.mesh, _data_axis_size(self.mesh)
+        sharded = ndata > 1 and int(ids.shape[0]) % ndata == 0
+        if sharded:
+            inputs = _constrain_batch(inputs, mesh, ndata)
+        params = self.spec.unflatten(w_flat)
+        stacked, losses = self.train_fn(params, inputs, ids, seed)
+        stack = (stacked if getattr(stacked, "ndim", None) == 2
+                 else self.spec.flatten_stacked(stacked))
+        if sharded:
+            stack = jax.lax.with_sharding_constraint(
+                stack, bank_sharding(mesh))
+            bank_term = sharded_contract(wv_bank, stack, mesh)
+        else:
+            bank_term = wv_bank @ stack
+        new_w = base_w * w_flat + bank_term + wv_carry @ carry
+        if kpad:
+            c, n = stack.shape
+            if blocked_m:
+                # new orbits own contiguous equal row blocks (the common
+                # full-participation layout): one O(C*N) blocked einsum
+                pm = jnp.einsum("km,kmn->kn",
+                                dw_row.reshape(kpad, blocked_m),
+                                stack.reshape(kpad, blocked_m, n))
+            else:
+                # general layout: one-hot the segment ids into a dense
+                # (kpad+1, C) weight matrix on device and GEMM (the +1
+                # dump row also keeps XLA CPU off its pathological
+                # 1-row-dot fusion)
+                w_mat = (jax.nn.one_hot(dw_seg, kpad + 1,
+                                        dtype=jnp.float32).T
+                         * dw_row[None, :])
+                pm = (w_mat @ stack)[:kpad]
+            pm = pm + dw_carry @ carry
+            dists = jnp.linalg.norm(pm - ref[None, :], axis=1)
+        else:
+            dists = jnp.zeros((0,), jnp.float32)
+        return new_w, stack, dists, losses
+
+    # ---- dispatch ----------------------------------------------------------
+
+    def step(self, w_flat, carry, inputs, ids_np: np.ndarray, seed: int,
+             wv_bank: np.ndarray, wv_carry: np.ndarray, base_w: float,
+             dw_row: np.ndarray, dw_seg: np.ndarray, kpad: int,
+             blocked_m: int, dw_carry: np.ndarray, ref,
+             *, fallback: bool = False):
+        """Dispatch one epoch.  All returned values are lazy device arrays —
+        nothing here blocks; callers block only on what they record.
+
+        ``w_flat`` is consumed (donated): pass a buffer you will not
+        reuse.  ``wv_*`` / ``dw_*`` / ``base_w`` are host metadata (numpy);
+        ``ids_np`` is the padded participant id vector.  ``dw_row``/
+        ``dw_seg`` give each bank row its partial-model weight and its
+        new-orbit segment (``kpad`` = dump id, static; pow2-bucketed so
+        trace count stays O(log orbits)); ``blocked_m`` > 0 (static)
+        asserts segment k owns exactly rows [k*m, (k+1)*m) and selects the
+        blocked einsum.  The returned distances carry ``kpad`` entries of
+        which the first K are real.
+        """
+        if fallback:
+            self.fallback_dispatches += 1
+        else:
+            self.dispatches += 1
+        return self._step(
+            w_flat, carry, inputs,
+            jnp.asarray(ids_np, jnp.int32), np.uint32(seed),
+            jnp.asarray(np.asarray(wv_bank, np.float32)),
+            jnp.asarray(np.asarray(wv_carry, np.float32)),
+            np.float32(base_w),
+            jnp.asarray(np.asarray(dw_row, np.float32)),
+            jnp.asarray(np.asarray(dw_seg, np.int32)),
+            int(kpad), int(blocked_m),
+            jnp.asarray(np.asarray(dw_carry, np.float32)),
+            ref)
+
+
+def make_epoch_program(trainer, params, mesh: Optional[Mesh] = None,
+                       *, donate: bool = True) -> Optional[EpochStepProgram]:
+    """Build (or reuse) the fused program for a trainer exposing the
+    fused-epoch protocol (``epoch_train_fn`` + ``epoch_inputs``); None
+    otherwise.  Programs are cached on the trainer so repeated simulations
+    with the same trainer share jit traces and compiled executables."""
+    fn = getattr(trainer, "epoch_train_fn", None)
+    if fn is None or not hasattr(trainer, "epoch_inputs"):
+        return None
+    spec = FlatSpec.of(params)
+    cache = getattr(trainer, "_epoch_programs", None)
+    if cache is None:
+        cache = {}
+        try:
+            trainer._epoch_programs = cache
+        except AttributeError:        # trainer forbids attributes: no reuse
+            pass
+    key = (spec, mesh, donate)        # Mesh is hashable; id() could collide
+    prog = cache.get(key)
+    if prog is None:
+        prog = cache[key] = EpochStepProgram(spec, fn(), mesh=mesh,
+                                             donate=donate)
+    return prog

@@ -83,6 +83,47 @@ def group_by_gaps(distances: Dict[int, float], num_groups: int = 3) -> List[List
     return groups
 
 
+def segment_partial_inputs(new_orbits: Sequence[int],
+                           orbit_indices: Dict[int, List[int]],
+                           rows: Sequence[int], sizes: Sequence[float],
+                           totals: Dict[int, float], n_rows: int,
+                           dump: int):
+    """Per-row (weight, segment id) arrays for the fused epoch program's
+    O(C*N) partial-model segment-sum: row ``r`` gets orbit k's
+    size-normalized weight when model j with ``rows[j] == r`` belongs to
+    ``new_orbits[k]``; unowned rows get weight 0 and segment ``dump``.
+    Each bank row feeds at most one orbit, which is what makes the
+    segment-sum equivalent to the dense (K, n_rows) matrix product."""
+    w = np.zeros(n_rows, np.float32)
+    seg = np.full(n_rows, dump, np.int32)
+    for k, orbit in enumerate(new_orbits):
+        for j in orbit_indices[orbit]:
+            r = rows[j]
+            if r >= 0:
+                w[r] = sizes[j] / totals[orbit]
+                seg[r] = k
+    return w, seg
+
+
+def segment_weight_matrix(new_orbits: Sequence[int],
+                          orbit_indices: Dict[int, List[int]],
+                          rows: Sequence[int], sizes: Sequence[float],
+                          totals: Dict[int, float],
+                          n_rows: int) -> np.ndarray:
+    """(K, n_rows) per-orbit partial-model weight rows for ONE segment:
+    row k holds the size-normalized weights of orbit k's models that live
+    in this segment (``rows[j]`` is model j's row there, -1 elsewhere).
+    Host metadata math — shared by ``observe_orbits_multi`` and the fused
+    epoch program, which takes the matrices as inputs and returns the
+    distances (DESIGN.md §6)."""
+    from repro.core.aggregation import scatter_weights
+    return np.stack([scatter_weights(
+        [rows[j] for j in orbit_indices[orbit]],
+        [sizes[j] / totals[orbit] for j in orbit_indices[orbit]],
+        n_rows) for orbit in new_orbits]) if new_orbits else \
+        np.zeros((0, n_rows), np.float32)
+
+
 @dataclasses.dataclass
 class GroupingState:
     """Incremental grouping maintained by the sink HAP."""
@@ -218,15 +259,12 @@ class GroupingState:
         assert self.ref_flat is not None, "set_reference(w0) first"
         totals = {o: float(sum(sizes[j] for j in orbit_indices[o]))
                   for o in new_orbits}
-        from repro.core.aggregation import scatter_weights
         pm = None
         for stack, rows in segments:
             if stack is None or stack.shape[0] == 0:
                 continue
-            W = np.stack([scatter_weights(
-                [rows[j] for j in orbit_indices[orbit]],
-                [sizes[j] / totals[orbit] for j in orbit_indices[orbit]],
-                stack.shape[0]) for orbit in new_orbits])
+            W = segment_weight_matrix(new_orbits, orbit_indices, rows,
+                                      sizes, totals, stack.shape[0])
             if not W.any():
                 continue
             term = jnp.asarray(W) @ stack
@@ -236,6 +274,15 @@ class GroupingState:
         ds = np.asarray(jnp.linalg.norm(pm - self._ref_device()[None, :],
                                         axis=1))
         self._assign_new(new_orbits, ds, out)
+        return out
+
+    def assign_distances(self, new_orbits: Sequence[int],
+                         ds: Sequence[float]) -> Dict[int, int]:
+        """Record externally computed distances-to-w0 (e.g. the fused epoch
+        program's output) for new orbits and assign their groups — the same
+        sequential replay ``observe_orbits*`` uses."""
+        out: Dict[int, int] = {}
+        self._assign_new(list(new_orbits), np.asarray(ds), out)
         return out
 
     def _assign_new(self, new_orbits, ds, out: Dict[int, int]) -> None:

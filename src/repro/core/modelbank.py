@@ -121,16 +121,22 @@ def flat_base(spec: FlatSpec, base):
 
 
 @jax.jit
-def _flatten_tree(model):
-    # structure-generic: jax.jit re-specializes per pytree structure
+def flatten_tree(model):
+    """Pytree -> (N,) float32 vector in the §2 layout.  Jitted when called
+    eagerly; inlines when traced inside a larger program (the fused epoch
+    step and custom ``epoch_train_fn`` implementations use it that way —
+    structure-generic, jax.jit re-specializes per pytree structure)."""
     leaves = jax.tree_util.tree_leaves(model)
     return jnp.concatenate(
         [jnp.ravel(l).astype(jnp.float32) for l in leaves])
 
 
+_flatten_tree = flatten_tree          # former private name
+
+
 def _flatten_jit(spec: FlatSpec):
     del spec                     # flatten needs no spec; jit caches by tree
-    return _flatten_tree
+    return flatten_tree
 
 
 def _unflatten_jit(spec: FlatSpec):

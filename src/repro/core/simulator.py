@@ -14,14 +14,22 @@ epoch beta:
      staleness discounting; FedAvg barrier; per-arrival; fixed interval);
   5. evaluate  — test accuracy of the new global model at the trigger time.
 
-When the trainer exposes ``train_many_stacked`` (and
-``SimConfig.use_model_bank`` is left on), steps 2-4 run on the
-device-resident ``ModelBank`` path: local models stay one stacked (C, N)
-array from training output through grouping and aggregation — no
-per-satellite pytree unstacking, no ``device_get``; only the new global
-model is unflattened (on device) once per epoch for the evaluator and the
-next downlink.  Trainers without the stacked API (e.g. test stubs) use the
-legacy pytree path.
+Three trainer paths, fastest first (DESIGN.md §2/§6):
+
+* **fused** — trainers exposing the fused-epoch protocol
+  (``epoch_train_fn`` + ``epoch_inputs``) run steps 2-4 as ONE donated
+  jitted device program per epoch (``core/epoch_step.py``): propagation
+  timing and all per-model weight metadata math happen on host *before*
+  the dispatch, training/grouping-distances/aggregation happen inside it.
+  Losses stay lazy device arrays the simulator never forces, and accuracy
+  values are blocked on only when the history is finalized.  Carried
+  stragglers live in a small device matrix re-gathered per epoch (never
+  donated twice).
+* **stacked** — trainers with ``train_many_stacked`` keep local models as
+  one device-resident (C, N) stack through grouping and aggregation but
+  issue separate (still fused per-segment) dispatches.
+* **legacy** — pytree trainers (e.g. test stubs) take the seed's
+  host-pytree path.
 
 The output is a history of (sim_time_s, epoch, accuracy, ...) rows, from
 which convergence time (time to reach a target accuracy) is read — the
@@ -29,7 +37,9 @@ paper's Table II / Fig. 6 quantities.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -40,8 +50,10 @@ from repro.core import aggregation as agg
 from repro.core.aggregation import SatelliteMeta
 from repro.core.constellation import (WalkerDelta, make_ps_nodes,
                                       paper_constellation)
-from repro.core.grouping import GroupingState
+from repro.core.grouping import (GroupingState, segment_partial_inputs,
+                                 segment_weight_matrix)
 from repro.core.links import LinkModel, model_bits
+from repro.core.modelbank import FlatSpec, gather_rows, pad_bucket_ids
 from repro.core.propagation import PropagationModel
 from repro.core.topology import RingOfStars
 from repro.core.visibility import VisibilityTimeline
@@ -60,6 +72,8 @@ class SimConfig:
     sync_stall_s: float = 86400.0      # cap a sync round at this (stragglers)
     link: Optional[LinkModel] = None   # None -> paper Table I RF (16 Mb/s)
     use_model_bank: bool = True        # stacked path when trainer supports it
+    use_fused_step: bool = True        # one donated program/epoch (DESIGN §6)
+    mesh: Optional[object] = None      # jax Mesh with a "data" axis, or None
 
 
 @dataclasses.dataclass
@@ -92,10 +106,30 @@ class FLSimulation:
         # legacy path: (arrival_t, sat, host pytree, trained_from_epoch)
         self.pending: List[tuple] = []
         # stacked path: stragglers live in a small host matrix (O(late)
-        # rows, not O(S)) and re-enter aggregation as their own fused term
+        # rows, not O(S)); fused path keeps them as a small DEVICE matrix
+        # so nothing blocks — both re-enter aggregation as one fused term
         self._pend_np: Optional[np.ndarray] = None       # (L, N) float32
+        self._pend_dev = None                            # (L, N) device
         self._pend_meta: List[tuple] = []      # (arrival_t, sat, epoch)
-        self._spec = None              # FlatSpec of the stacked path
+        self._spec = None              # FlatSpec of the stacked/fused path
+        self._fused_prog = None        # EpochStepProgram (fused path)
+        # fused path: distances of newly seen orbits are fetched lazily —
+        # (new_orbits, device dists, block map, block size), resolved at
+        # the next grouping read so the next epoch's host timing overlaps
+        # the device stream instead of draining it
+        self._dist_pending = None
+        # wall-time attribution per host-side section (bench breakdown)
+        self.segment_seconds: Dict[str, float] = {
+            k: 0.0 for k in ("timing", "train", "step", "agg", "group",
+                             "carry", "eval")}
+
+    @contextlib.contextmanager
+    def _seg(self, key: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.segment_seconds[key] += time.perf_counter() - t0
 
     # ------------------------------------------------------------------
 
@@ -142,184 +176,377 @@ class FLSimulation:
                                   use_kernel=self.spec.use_agg_kernel)
         return base_flat if out is None else out
 
-    # ------------------------------------------------------------------
+    # ---- shared per-epoch host metadata ------------------------------
 
-    def run(self, w0, max_epochs: int = 30,
-            target_accuracy: Optional[float] = None) -> List[EpochRecord]:
+    def _trigger(self, arrivals, t: float):
+        """Aggregation trigger: (t_agg, used, late) from sorted arrivals."""
         sim, spec = self.sim, self.spec
-        bits = model_bits(w0)
-        self.grouping.set_reference(w0)
-        stacked = sim.use_model_bank and hasattr(self.trainer,
-                                                 "train_many_stacked")
-        w_tree = w0                       # pytree view (trainer/evaluator)
-        w_flat = None                     # flat device view (stacked path)
-        t = 0.0
-        source = 0
-        history: List[EpochRecord] = []
-        S = self.constellation.num_sats
+        if spec.sync:
+            t_agg = min(arrivals[-1][0] if arrivals else t,
+                        t + sim.sync_stall_s)
+            used = [a for a in arrivals if a[0] <= t_agg]
+        else:
+            t_first = arrivals[0][0] if arrivals else t
+            t_agg = min(t_first + sim.agg_timeout_s, sim.duration_s)
+            used = [a for a in arrivals if a[0] <= t_agg]
+            if len(used) < sim.min_models:
+                used = arrivals[: sim.min_models]
+                t_agg = used[-1][0] if used else t_agg
+        late = [a for a in arrivals if a[0] > t_agg]
+        return t_agg, used, late
 
-        for beta in range(max_epochs):
-            if t >= sim.duration_s:
-                break
-            sink = self.topo.sink_of(source)
-            recv = self._downlink(t, bits, source)
+    def _mode_weights(self, metas: List[SatelliteMeta], beta: int,
+                      groups: Optional[Dict[int, List[int]]]):
+        """Per-model weight vector + base weight for the epoch update
+        (:func:`repro.core.aggregation.epoch_weight_vector`)."""
+        return agg.epoch_weight_vector(
+            self.spec.agg_mode, metas, beta, groups,
+            strict_paper_eq14=self.spec.strict_paper_eq14)
 
-            # local training (real JAX, one batched call) + uplink timing
-            participants = [s for s in range(S) if np.isfinite(recv[s])]
-            bank = None
-            if participants:
-                if stacked:
-                    bank, _losses = self.trainer.train_many_stacked(
-                        participants, w_tree, seed=sim.seed * 1000 + beta)
-                    self._spec = bank.spec
-                    trained = range(len(participants))   # row indices
-                else:
-                    trained, _losses = self.trainer.train_many(
-                        participants, w_tree, seed=sim.seed * 1000 + beta)
+    @staticmethod
+    def _blocked_layout(new_orbits, orbit_indices, bank_rows, n_rows: int,
+                        kpad: int):
+        """Detect whether every new orbit's bank rows sit in one distinct
+        contiguous block of ``n_rows // kpad`` rows (the common
+        full-participation layout).  Returns (block size m, orbit-index ->
+        block map); (0, {}) when the layout is irregular and the program
+        must fall back to the dense one-hot GEMM.  The blocked einsum is
+        O(C*N) instead of O(K*C*N) — see DESIGN.md §6."""
+        if not kpad or not n_rows or n_rows % kpad:
+            return 0, {}
+        mb = n_rows // kpad
+        block_of: Dict[int, int] = {}
+        used = set()
+        homeless = []
+        for k, o in enumerate(new_orbits):
+            blocks = {bank_rows[j] // mb for j in orbit_indices[o]
+                      if bank_rows[j] >= 0}
+            if len(blocks) > 1:
+                return 0, {}
+            if blocks:
+                b = blocks.pop()
+                if b in used:
+                    return 0, {}
+                block_of[k] = b
+                used.add(b)
+            else:
+                homeless.append(k)      # carry-only orbit: any free block
+        free = (b for b in range(kpad) if b not in used)
+        for k in homeless:
+            b = next(free, None)
+            if b is None:
+                return 0, {}
+            block_of[k] = b
+        return mb, block_of
+
+    def _resolve_pending_dists(self) -> None:
+        """Fetch + record the previous epoch's new-orbit distances.  MUST
+        run before any grouping-state read (``group_of`` / ``groups``)."""
+        pend = self._dist_pending
+        if pend is None:
+            return
+        self._dist_pending = None
+        new_orbits, dists, block_of, blocked_m = pend
+        with self._seg("group"):
+            ds_full = np.asarray(dists)          # tiny (kpad,) transfer
+            if blocked_m:
+                ds = ds_full[[block_of[k] for k in range(len(new_orbits))]]
+            else:
+                ds = ds_full[:len(new_orbits)]
+            self.grouping.assign_distances(new_orbits, ds)
+
+    def _carried_split(self, t_agg: float):
+        """Indices of pending stragglers that arrived (<= t_agg) vs kept."""
+        c_idx = [i for i, (ta, _s, _ep) in enumerate(self._pend_meta)
+                 if ta <= t_agg]
+        k_idx = [i for i in range(len(self._pend_meta)) if i not in c_idx]
+        return c_idx, k_idx
+
+    # ---- fused path (one donated program per epoch, DESIGN.md §6) ----
+
+    def _fused_epoch(self, prog, beta, participants, recv, t, bits, sink):
+        from repro.core.epoch_step import carry_capacity, next_pow2
+
+        sim, spec = self.sim, self.spec
+        seed = sim.seed * 1000 + beta
+        self._spec = prog.spec
+        N = prog.spec.num_params
+
+        # all host work happens BEFORE the dispatch: propagation timing,
+        # trigger, straggler bookkeeping, weight-vector metadata math
+        arrivals = []
+        ids_np = np.zeros(0, np.int32)
+        if participants:
+            with self._seg("timing"):
+                ids_np, _n = pad_bucket_ids(participants)
                 t_done = recv[participants] + sim.train_time_s
                 t_arr_vec, _haps = self._uplink_many(participants, t_done,
                                                      bits, sink)
-                arrivals = [(float(t_arr_vec[k]), s, payload)
-                            for k, (s, payload)
-                            in enumerate(zip(participants, trained))
-                            if np.isfinite(t_arr_vec[k])]
-                arrivals.sort(key=lambda a: a[0])
-            else:
-                arrivals = []
-            if not arrivals and not self.pending and not self._pend_meta:
-                break
+            arrivals = [(float(t_arr_vec[k]), s, k)
+                        for k, s in enumerate(participants)
+                        if np.isfinite(t_arr_vec[k])]
+            arrivals.sort(key=lambda a: a[0])
+        if not arrivals and not self._pend_meta:
+            return None
+        t_agg, used, late = self._trigger(arrivals, t)
+        c_idx, k_idx = self._carried_split(t_agg)
 
-            # ---- aggregation trigger --------------------------------------
-            if spec.sync:
-                t_agg = min(arrivals[-1][0] if arrivals else t,
-                            t + sim.sync_stall_s)
-                used = [a for a in arrivals if a[0] <= t_agg]
-                late = [a for a in arrivals if a[0] > t_agg]
-            else:
-                t_first = arrivals[0][0] if arrivals else t
-                t_agg = min(t_first + sim.agg_timeout_s, sim.duration_s)
-                used = [a for a in arrivals if a[0] <= t_agg]
-                if len(used) < sim.min_models:
-                    used = arrivals[: sim.min_models]
-                    t_agg = used[-1][0] if used else t_agg
-                late = [a for a in arrivals if a[0] > t_agg]
+        metas = [SatelliteMeta(s, self.trainer.data_size(s),
+                               loc=(0.0, 0.0), ts=ta, epoch=beta)
+                 for (ta, s, _k) in used]
+        metas += [SatelliteMeta(s, self.trainer.data_size(s),
+                                loc=(0.0, 0.0), ts=ta, epoch=ep)
+                  for (ta, s, ep) in (self._pend_meta[i] for i in c_idx)]
+        bank_rows = [k for (_, _, k) in used] + [-1] * len(c_idx)
+        carry_rows = [-1] * len(used) + list(range(len(c_idx)))
+        keep = agg.dedup_indices(metas)
+        if len(keep) < len(metas):
+            metas = [metas[i] for i in keep]
+            bank_rows = [bank_rows[i] for i in keep]
+            carry_rows = [carry_rows[i] for i in keep]
 
-            # models stuck from previous epochs arrive as stale candidates
-            metas = [SatelliteMeta(s, self.trainer.data_size(s),
-                                   loc=(0.0, 0.0), ts=ta, epoch=beta)
-                     for (ta, s, _p) in used]
-            segments = None
-            if stacked:
-                c_idx = [i for i, (ta, _s, _ep) in enumerate(self._pend_meta)
-                         if ta <= t_agg]
-                k_idx = [i for i in range(len(self._pend_meta))
-                         if i not in c_idx]
-                metas += [SatelliteMeta(s, self.trainer.data_size(s),
-                                        loc=(0.0, 0.0), ts=ta, epoch=ep)
-                          for (ta, s, ep) in (self._pend_meta[i]
-                                              for i in c_idx)]
-                # row bookkeeping instead of row gathers: metas index j maps
-                # to a row of the intact epoch bank or the carried matrix
-                bank_rows = ([k for (_, _, k) in used]
-                             + [-1] * len(c_idx))
-                carry_rows = [-1] * len(used) + list(range(len(c_idx)))
-                carry_np = (self._pend_np[np.asarray(c_idx)]
-                            if c_idx else None)
-                # retire carried stragglers, enqueue this epoch's late rows
-                # (bucketed gather + one small device_get — O(late), not O(S))
-                keep_np = (self._pend_np[np.asarray(k_idx)]
-                           if k_idx else None)
-                keep_meta = [self._pend_meta[i] for i in k_idx]
-                if late:
-                    from repro.core.modelbank import (gather_rows,
-                                                      pad_bucket_ids)
-                    lk, n_late = pad_bucket_ids([k for (_, _, k) in late])
-                    late_np = np.asarray(jax.device_get(
-                        gather_rows(bank.stack, lk)))[:n_late]
-                    keep_np = (late_np if keep_np is None else
-                               np.concatenate([keep_np, late_np]))
-                    keep_meta += [(ta, s, beta) for (ta, s, _k) in late]
-                self._pend_np, self._pend_meta = keep_np, keep_meta
+        # carried stragglers: a small padded device matrix (pad rows repeat
+        # row 0 and carry zero weight); rebuilt from _pend_dev every epoch
+        # so the program may freely consume (donate) its buffer
+        cap = carry_capacity(len(c_idx))
+        if c_idx:
+            gids = np.asarray(c_idx + [c_idx[0]] * (cap - len(c_idx)),
+                              np.int32)
+            carry = gather_rows(self._pend_dev, gids)
+        else:
+            carry = jnp.zeros((cap, N), jnp.float32)
 
-                keep = agg.dedup_indices(metas)
-                if len(keep) < len(metas):
-                    metas = [metas[i] for i in keep]
-                    bank_rows = [bank_rows[i] for i in keep]
-                    carry_rows = [carry_rows[i] for i in keep]
-                carry_dev = (jnp.asarray(carry_np)
-                             if carry_np is not None
-                             and any(r >= 0 for r in carry_rows) else None)
-                segments = [(bank.stack if bank is not None else None,
-                             bank_rows), (carry_dev, carry_rows)]
-                models = None
-            else:
-                carried = [(ta, s, p, ep) for (ta, s, p, ep) in self.pending
-                           if ta <= t_agg]
-                self.pending = [x for x in self.pending if x[0] > t_agg]
-                self.pending.extend((ta, s, p, beta) for (ta, s, p) in late)
-                metas += [SatelliteMeta(s, self.trainer.data_size(s),
-                                        loc=(0.0, 0.0), ts=ta, epoch=ep)
-                          for (ta, s, _p, ep) in carried]
-                models = ([p for (_, _, p) in used]
-                          + [p for (_, _, p, _) in carried])
-                models, metas = agg.dedup(models, metas)
-            if stacked and w_flat is None:
-                w_flat = self._spec.flatten(w_tree) if self._spec else None
-            base = w_flat if stacked else w_tree
-
-            # ---- aggregate -------------------------------------------------
-            # per-model weights are host metadata math in every mode; on the
-            # stacked path the tensor update is a couple of fused per-segment
-            # contractions (epoch bank + carried stragglers), no row copies
-            info = {"gamma": 1.0, "stale_groups": 0}
-            n_meta = len(metas)
-            if spec.agg_mode == "fedavg":
-                if stacked:
-                    total = float(sum(m.size for m in metas))
-                    ws = np.array([m.size / total for m in metas])
-                    w_new = self._combine(segments, ws, None, 0.0)
+        # groups + new-orbit partial-model inputs (host metadata): the
+        # program computes distances as an O(C*N) segment-sum, so the host
+        # ships per-row weights + segment ids, not a (K, C) matrix
+        groups = None
+        new_orbits: List[int] = []
+        orbit_indices: Dict[int, List[int]] = {}
+        kpad, blocked_m = 0, 0
+        block_of: Dict[int, int] = {}
+        dw_row = np.zeros(len(ids_np), np.float32)
+        dw_seg = np.zeros(len(ids_np), np.int32)
+        dw_carry = np.zeros((0, cap), np.float32)
+        fallback = False
+        if spec.agg_mode == "asyncfleo" and not spec.grouping:
+            groups = {0: list(range(len(metas)))}
+        elif spec.agg_mode == "asyncfleo":
+            self._resolve_pending_dists()        # state read follows
+            for i, meta in enumerate(metas):
+                orbit_indices.setdefault(
+                    int(self.orbit_ids[meta.sat_id]), []).append(i)
+            known = {o: self.grouping.group_of(o) for o in orbit_indices}
+            new_orbits = [o for o, g in known.items() if g is None]
+            if new_orbits:
+                sizes = [m.size for m in metas]
+                totals = {o: float(sum(sizes[j] for j in orbit_indices[o]))
+                          for o in new_orbits}
+                kpad = next_pow2(len(new_orbits))
+                dw_row, dw_seg = segment_partial_inputs(
+                    new_orbits, orbit_indices, bank_rows, sizes, totals,
+                    len(ids_np), kpad)
+                carry_w = segment_weight_matrix(
+                    new_orbits, orbit_indices, carry_rows, sizes, totals,
+                    cap)
+                blocked_m, block_of = self._blocked_layout(
+                    new_orbits, orbit_indices, bank_rows, len(ids_np),
+                    kpad)
+                dw_carry = np.zeros((kpad, cap), np.float32)
+                if blocked_m:
+                    for k in range(len(new_orbits)):
+                        dw_carry[block_of[k]] = carry_w[k]
                 else:
-                    w_new = agg.fedavg(models, [m.size for m in metas],
-                                       use_kernel=spec.use_agg_kernel)
-            elif spec.agg_mode == "per_arrival":
-                if stacked:
-                    # closed form of the sequential EMA: model i keeps
-                    # alpha_i * prod_{j>i} (1 - alpha_j)
-                    alphas = [0.5 / (1.0 + max(beta - m.epoch, 0))
-                              for m in metas]
-                    ws = np.zeros(n_meta)
-                    bw = 1.0
-                    for i in reversed(range(n_meta)):
-                        ws[i] = alphas[i] * (1.0 if i == n_meta - 1 else
-                                             ws[i + 1] / alphas[i + 1]
-                                             * (1.0 - alphas[i + 1]))
-                    for i in range(n_meta):
-                        bw *= 1.0 - alphas[i]
-                    w_new = self._combine(segments, ws, base, bw)
-                else:
-                    w_new = base
-                    for m_i, meta in zip(models, metas):
-                        alpha = 0.5 / (1.0 + max(beta - meta.epoch, 0))
-                        w_new = agg.weighted_sum([m_i], [alpha], base=w_new,
-                                                 base_weight=1.0 - alpha)
-            elif spec.agg_mode == "interval":
-                total = sum(m.size for m in metas)
-                raw = np.array([m.size * (1.0 / (1.0 + max(beta - m.epoch, 0)))
-                                for m in metas])
-                gam = float(np.clip(raw.sum() / max(total, 1e-9), 0.2, 1.0))
-                if stacked:
-                    w_new = self._combine(segments, gam * raw / raw.sum(),
-                                          base, 1.0 - gam)
-                else:
-                    w_new = agg.weighted_sum(models, gam * raw / raw.sum(),
-                                             base=base, base_weight=1.0 - gam)
-                t_agg = max(t_agg, t + spec.interval_s)
-                info["gamma"] = gam
-            else:                                        # asyncfleo (Alg. 2)
-                groups: Dict[int, List[int]] = {}
-                if not spec.grouping:                    # ablation: one group
-                    groups[0] = list(range(len(metas)))
-                elif stacked:
+                    dw_carry[:len(new_orbits)] = carry_w
+            any_stale = any(not m.is_fresh(beta) for m in metas)
+            # group membership only moves weights through which *stale*
+            # models survive selection; with everything fresh the weights
+            # are group-independent, so provisional singleton groups keep
+            # the epoch at one dispatch.  A new orbit arriving while stale
+            # models are pending is the one case where the weight vector
+            # depends on this epoch's distances -> two dispatches.
+            fallback = bool(new_orbits) and any_stale
+            groups = {}
+            provisional = -1
+            for o, idxs in orbit_indices.items():
+                gi = known[o]
+                if gi is None:
+                    gi = provisional
+                    provisional -= 1
+                groups.setdefault(gi, []).extend(idxs)
+
+        if not participants:
+            # nothing trained this epoch: no program — one eager fused
+            # combine over the carried-stragglers matrix only
+            return self._fused_no_train(beta, metas, carry, carry_rows,
+                                        c_idx, k_idx, new_orbits,
+                                        orbit_indices, groups, t_agg)
+
+        with self._seg("agg"):
+            if fallback:
+                wv_bank = np.zeros(len(ids_np), np.float32)
+                wv_carry = np.zeros(cap, np.float32)
+                base_w, info = 1.0, None
+            else:
+                ws, base_w, info = self._mode_weights(metas, beta, groups)
+                wv_bank = agg.scatter_weights(bank_rows, ws, len(ids_np))
+                wv_carry = agg.scatter_weights(carry_rows, ws, cap)
+
+        with self._seg("step"):
+            inputs = self.trainer.epoch_inputs(ids_np)
+            new_w, stack, dists, losses = prog.step(
+                self._w_flat, carry, inputs, ids_np, seed,
+                wv_bank, wv_carry, base_w, dw_row, dw_seg, kpad,
+                blocked_m, dw_carry, self.grouping._ref_device(),
+                fallback=fallback)
+
+        if new_orbits:
+            # don't block here: the fetch resolves at the next grouping
+            # read, letting the next epoch's host work overlap the stream
+            self._dist_pending = (new_orbits, dists, block_of, blocked_m)
+
+        if fallback:
+            self._resolve_pending_dists()        # weights need the groups
+            with self._seg("agg"):
+                groups = {}
+                for o, idxs in orbit_indices.items():
+                    gi = self.grouping.group_of(o)
+                    groups.setdefault(gi, []).extend(idxs)
+                ws, base_w, info = self._mode_weights(metas, beta, groups)
+                out = agg.combine_stacked(
+                    [(stack, agg.scatter_weights(bank_rows, ws,
+                                                 len(ids_np))),
+                     (carry if c_idx else None,
+                      agg.scatter_weights(carry_rows, ws, cap))],
+                    new_w, base_w, use_kernel=spec.use_agg_kernel)
+                new_w = out if out is not None else new_w
+
+        # retire carried stragglers, enqueue this epoch's late rows —
+        # all lazy device gathers, nothing blocks
+        with self._seg("carry"):
+            kept_meta = [self._pend_meta[i] for i in k_idx]
+            kept_dev = (gather_rows(self._pend_dev,
+                                    np.asarray(k_idx, np.int32))
+                        if k_idx else None)
+            if late:
+                late_ids = np.asarray([k for (_, _, k) in late], np.int32)
+                late_dev = gather_rows(stack, late_ids)
+                kept_dev = (late_dev if kept_dev is None
+                            else jnp.concatenate([kept_dev, late_dev]))
+                kept_meta += [(ta, s, beta) for (ta, s, _k) in late]
+            self._pend_dev, self._pend_meta = kept_dev, kept_meta
+
+        self._w_flat = new_w
+        return t_agg, metas, info, losses
+
+    def _fused_no_train(self, beta, metas, carry, carry_rows, c_idx, k_idx,
+                        new_orbits, orbit_indices, groups, t_agg):
+        """Fused-path epoch with no participants: carried stragglers only."""
+        spec = self.spec
+        if new_orbits:
+            with self._seg("group"):
+                sizes = [m.size for m in metas]
+                totals = {o: float(sum(sizes[j] for j in orbit_indices[o]))
+                          for o in new_orbits}
+                dw = segment_weight_matrix(new_orbits, orbit_indices,
+                                           carry_rows, sizes, totals,
+                                           carry.shape[0])
+                pm = jnp.asarray(dw) @ carry
+                ds = np.asarray(jnp.linalg.norm(
+                    pm - self.grouping._ref_device()[None, :], axis=1))
+                self.grouping.assign_distances(new_orbits, ds)
+            if spec.agg_mode == "asyncfleo" and spec.grouping:
+                groups = {}
+                for o, idxs in orbit_indices.items():
+                    groups.setdefault(self.grouping.group_of(o),
+                                      []).extend(idxs)
+        with self._seg("agg"):
+            ws, base_w, info = self._mode_weights(metas, beta, groups)
+            out = agg.combine_stacked(
+                [(carry, agg.scatter_weights(carry_rows, ws,
+                                             carry.shape[0]))],
+                self._w_flat, base_w, use_kernel=spec.use_agg_kernel)
+            if out is not None:
+                self._w_flat = out
+        kept_meta = [self._pend_meta[i] for i in k_idx]
+        kept_dev = (gather_rows(self._pend_dev, np.asarray(k_idx, np.int32))
+                    if k_idx else None)
+        self._pend_dev, self._pend_meta = kept_dev, kept_meta
+        return t_agg, metas, info, None
+
+    # ---- stacked path (device-resident bank, chained dispatches) -----
+
+    def _stacked_epoch(self, beta, participants, recv, t, bits, sink,
+                       w_tree):
+        sim, spec = self.sim, self.spec
+        bank = None
+        arrivals = []
+        if participants:
+            with self._seg("train"):
+                bank, _losses = self.trainer.train_many_stacked(
+                    participants, w_tree, seed=sim.seed * 1000 + beta)
+                self._spec = bank.spec
+            with self._seg("timing"):
+                t_done = recv[participants] + sim.train_time_s
+                t_arr_vec, _haps = self._uplink_many(participants, t_done,
+                                                     bits, sink)
+            arrivals = [(float(t_arr_vec[k]), s, k)
+                        for k, s in enumerate(participants)
+                        if np.isfinite(t_arr_vec[k])]
+            arrivals.sort(key=lambda a: a[0])
+        if not arrivals and not self._pend_meta:
+            return None
+        t_agg, used, late = self._trigger(arrivals, t)
+        c_idx, k_idx = self._carried_split(t_agg)
+
+        metas = [SatelliteMeta(s, self.trainer.data_size(s),
+                               loc=(0.0, 0.0), ts=ta, epoch=beta)
+                 for (ta, s, _k) in used]
+        metas += [SatelliteMeta(s, self.trainer.data_size(s),
+                                loc=(0.0, 0.0), ts=ta, epoch=ep)
+                  for (ta, s, ep) in (self._pend_meta[i] for i in c_idx)]
+        # row bookkeeping instead of row gathers: metas index j maps to a
+        # row of the intact epoch bank or the carried matrix
+        bank_rows = [k for (_, _, k) in used] + [-1] * len(c_idx)
+        carry_rows = [-1] * len(used) + list(range(len(c_idx)))
+        with self._seg("carry"):
+            carry_np = self._pend_np[np.asarray(c_idx)] if c_idx else None
+            # retire carried stragglers, enqueue this epoch's late rows
+            # (bucketed gather + one small device_get — O(late), not O(S))
+            keep_np = self._pend_np[np.asarray(k_idx)] if k_idx else None
+            keep_meta = [self._pend_meta[i] for i in k_idx]
+            if late:
+                lk, n_late = pad_bucket_ids([k for (_, _, k) in late])
+                late_np = np.asarray(jax.device_get(
+                    gather_rows(bank.stack, lk)))[:n_late]
+                keep_np = (late_np if keep_np is None else
+                           np.concatenate([keep_np, late_np]))
+                keep_meta += [(ta, s, beta) for (ta, s, _k) in late]
+            self._pend_np, self._pend_meta = keep_np, keep_meta
+
+        keep = agg.dedup_indices(metas)
+        if len(keep) < len(metas):
+            metas = [metas[i] for i in keep]
+            bank_rows = [bank_rows[i] for i in keep]
+            carry_rows = [carry_rows[i] for i in keep]
+        carry_dev = (jnp.asarray(carry_np)
+                     if carry_np is not None
+                     and any(r >= 0 for r in carry_rows) else None)
+        segments = [(bank.stack if bank is not None else None, bank_rows),
+                    (carry_dev, carry_rows)]
+
+        # guard: a trainer that never ran leaves _spec unset — fall back
+        # to the pytree base's own structure instead of crashing
+        if self._spec is None:
+            self._spec = FlatSpec.of(w_tree)
+        if self._w_flat is None:
+            self._w_flat = self._spec.flatten(w_tree)
+
+        groups: Optional[Dict[int, List[int]]] = None
+        if spec.agg_mode == "asyncfleo":
+            if not spec.grouping:                    # ablation: one group
+                groups = {0: list(range(len(metas)))}
+            else:
+                with self._seg("group"):
                     # batched: all new-orbit partial models + distances in
                     # fused per-segment contractions over the bank
                     orbit_indices: Dict[int, List[int]] = {}
@@ -328,9 +555,82 @@ class FLSimulation:
                             int(self.orbit_ids[meta.sat_id]), []).append(i)
                     orbit_group = self.grouping.observe_orbits_multi(
                         orbit_indices, segments, [m.size for m in metas])
+                    groups = {}
                     for i, meta in enumerate(metas):
                         gi = orbit_group[int(self.orbit_ids[meta.sat_id])]
                         groups.setdefault(gi, []).append(i)
+
+        with self._seg("agg"):
+            # per-model weights are host metadata math; the tensor update
+            # is a couple of fused per-segment contractions (epoch bank +
+            # carried stragglers), no row copies
+            ws, base_w, info = self._mode_weights(metas, beta, groups)
+            w_new = self._combine(segments, ws, self._w_flat, base_w)
+            self._w_flat = (w_new if getattr(w_new, "ndim", None) == 1
+                            else self._spec.flatten(w_new))
+        return t_agg, metas, info, None
+
+    # ---- legacy path (host pytrees, the seed's semantics) ------------
+
+    def _legacy_epoch(self, beta, participants, recv, t, bits, sink,
+                      w_tree):
+        sim, spec = self.sim, self.spec
+        arrivals = []
+        if participants:
+            with self._seg("train"):
+                trained, _losses = self.trainer.train_many(
+                    participants, w_tree, seed=sim.seed * 1000 + beta)
+            with self._seg("timing"):
+                t_done = recv[participants] + sim.train_time_s
+                t_arr_vec, _haps = self._uplink_many(participants, t_done,
+                                                     bits, sink)
+            arrivals = [(float(t_arr_vec[k]), s, p)
+                        for k, (s, p)
+                        in enumerate(zip(participants, trained))
+                        if np.isfinite(t_arr_vec[k])]
+            arrivals.sort(key=lambda a: a[0])
+        if not arrivals and not self.pending:
+            return None
+        t_agg, used, late = self._trigger(arrivals, t)
+
+        metas = [SatelliteMeta(s, self.trainer.data_size(s),
+                               loc=(0.0, 0.0), ts=ta, epoch=beta)
+                 for (ta, s, _p) in used]
+        carried = [(ta, s, p, ep) for (ta, s, p, ep) in self.pending
+                   if ta <= t_agg]
+        self.pending = [x for x in self.pending if x[0] > t_agg]
+        self.pending.extend((ta, s, p, beta) for (ta, s, p) in late)
+        metas += [SatelliteMeta(s, self.trainer.data_size(s),
+                                loc=(0.0, 0.0), ts=ta, epoch=ep)
+                  for (ta, s, _p, ep) in carried]
+        models = ([p for (_, _, p) in used]
+                  + [p for (_, _, p, _) in carried])
+        models, metas = agg.dedup(models, metas)
+        base = w_tree
+
+        info = {"gamma": 1.0, "stale_groups": 0}
+        with self._seg("agg"):
+            if spec.agg_mode == "fedavg":
+                w_new = agg.fedavg(models, [m.size for m in metas],
+                                   use_kernel=spec.use_agg_kernel)
+            elif spec.agg_mode == "per_arrival":
+                w_new = base
+                for m_i, meta in zip(models, metas):
+                    alpha = 0.5 / (1.0 + max(beta - meta.epoch, 0))
+                    w_new = agg.weighted_sum([m_i], [alpha], base=w_new,
+                                             base_weight=1.0 - alpha)
+            elif spec.agg_mode == "interval":
+                total = sum(m.size for m in metas)
+                raw = np.array([m.size / (1.0 + max(beta - m.epoch, 0))
+                                for m in metas])
+                gam = float(np.clip(raw.sum() / max(total, 1e-9), 0.2, 1.0))
+                w_new = agg.weighted_sum(models, gam * raw / raw.sum(),
+                                         base=base, base_weight=1.0 - gam)
+                info["gamma"] = gam
+            else:                                    # asyncfleo (Alg. 2)
+                groups: Dict[int, List[int]] = {}
+                if not spec.grouping:                # ablation: one group
+                    groups[0] = list(range(len(metas)))
                 else:
                     for i, meta in enumerate(metas):
                         orbit = int(self.orbit_ids[meta.sat_id])
@@ -345,33 +645,81 @@ class FLSimulation:
                         groups.setdefault(gi, [])
                         if i not in groups[gi]:
                             groups[gi].append(i)
-                if stacked:
-                    selected, wsel, gamma, info = agg.asyncfleo_weights(
-                        groups, metas, beta,
-                        strict_paper_eq14=spec.strict_paper_eq14)
-                    if selected:
-                        ws = np.zeros(n_meta)
-                        ws[selected] = wsel
-                        w_new = self._combine(segments, ws, base, 1.0 - gamma)
-                    else:
-                        w_new = base
-                else:
-                    w_new, info = agg.asyncfleo_aggregate(
-                        base, groups, models, metas, beta,
-                        strict_paper_eq14=spec.strict_paper_eq14,
-                        use_kernel=spec.use_agg_kernel)
+                w_new, info = agg.asyncfleo_aggregate(
+                    base, groups, models, metas, beta,
+                    strict_paper_eq14=spec.strict_paper_eq14,
+                    use_kernel=spec.use_agg_kernel)
+        return t_agg, metas, info, w_new
 
-            if stacked:
-                w_flat = (w_new if getattr(w_new, "ndim", None) == 1
-                          else self._spec.flatten(w_new))
-                w_tree = self._spec.unflatten(w_flat)    # device, 1x/epoch
+    # ------------------------------------------------------------------
+
+    def run(self, w0, max_epochs: int = 30,
+            target_accuracy: Optional[float] = None) -> List[EpochRecord]:
+        sim, spec = self.sim, self.spec
+        bits = model_bits(w0)
+        self.grouping.set_reference(w0)
+        stacked = sim.use_model_bank and hasattr(self.trainer,
+                                                 "train_many_stacked")
+        fused = None
+        if stacked and sim.use_fused_step:
+            from repro.core.epoch_step import make_epoch_program
+            fused = make_epoch_program(self.trainer, w0, mesh=sim.mesh)
+            self._fused_prog = fused
+        w_tree = w0                       # pytree view (trainer/evaluator)
+        self._w_flat = None               # flat device view (stacked/fused)
+        self._dist_pending = None
+        if stacked:
+            self._spec = self._spec or FlatSpec.of(w0)
+            self._w_flat = self._spec.flatten(w0)
+        t = 0.0
+        source = 0
+        history: List[EpochRecord] = []
+        S = self.constellation.num_sats
+        lazy_eval = (target_accuracy is None
+                     and hasattr(self.evaluator, "eval_async"))
+
+        for beta in range(max_epochs):
+            if t >= sim.duration_s:
+                break
+            sink = self.topo.sink_of(source)
+            with self._seg("timing"):
+                recv = self._downlink(t, bits, source)
+            participants = [s for s in range(S) if np.isfinite(recv[s])]
+
+            if fused is not None:
+                out = self._fused_epoch(fused, beta, participants, recv, t,
+                                        bits, sink)
+            elif stacked:
+                out = self._stacked_epoch(beta, participants, recv, t,
+                                          bits, sink, w_tree)
             else:
-                w_tree = w_new
+                out = self._legacy_epoch(beta, participants, recv, t,
+                                         bits, sink, w_tree)
+            if out is None:
+                break
+            t_agg, metas, info, extra = out
+            if fused is not None:
+                # the fused path trains from w_flat directly: the pytree
+                # view only feeds the evaluator
+                if self.evaluator is not None:
+                    w_tree = self._spec.unflatten(self._w_flat)  # lazy
+            elif stacked:
+                w_tree = self._spec.unflatten(self._w_flat)  # device, lazy
+            else:
+                w_tree = extra
+            if spec.agg_mode == "interval":
+                t_agg = max(t_agg, t + spec.interval_s)
 
             for meta in metas:
                 self.last_epoch_included[meta.sat_id] = beta
 
-            acc = float(self.evaluator(w_tree)) if self.evaluator else float("nan")
+            with self._seg("eval"):
+                if self.evaluator is None:
+                    acc = float("nan")
+                elif lazy_eval:
+                    acc = self.evaluator.eval_async(w_tree)  # lazy device
+                else:
+                    acc = float(self.evaluator(w_tree))
             history.append(EpochRecord(beta, t_agg, acc, len(metas),
                                        float(info.get("gamma", 1.0)),
                                        int(info.get("stale_groups", 0))))
@@ -379,6 +727,10 @@ class FLSimulation:
             source, sink = sink, source            # §IV-B3 role swap
             if target_accuracy is not None and acc >= target_accuracy:
                 break
+        self._resolve_pending_dists()        # leave grouping state complete
+        with self._seg("eval"):
+            for rec in history:              # block once, at finalize time
+                rec.accuracy = float(rec.accuracy)
         return history
 
 

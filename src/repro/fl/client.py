@@ -5,15 +5,25 @@ its own shard.  ``ImageClassifierPool`` is the paper's workload (CNN/MLP on
 image classification); ``LMPool`` trains transformer LMs (our LLM-scale
 federated examples).  Training is jitted once and reused across satellites.
 
-Both pools expose two result forms:
+Both pools expose three result forms:
 
-* ``train_many_stacked`` — the fast path: one jitted vmap over the whole
-  participant set, returning a device-resident ``ModelBank`` (stacked
-  ``(C, N)`` float32, see DESIGN.md §2).  Participant counts are padded up
-  to power-of-two buckets so a changing number of participants hits at most
-  O(log S) traces instead of one per distinct count.
+* ``epoch_train_fn`` / ``epoch_inputs`` — the fused-epoch protocol
+  (DESIGN.md §6): a *traceable* training function the simulator inlines
+  into its single donated epoch program, plus the host-side gather of the
+  participants' data shards for one call.
+* ``train_many_stacked`` — one jitted vmap over the whole participant set,
+  returning a device-resident ``ModelBank`` (stacked ``(C, N)`` float32,
+  see DESIGN.md §2) and *lazy* device losses (``np.asarray`` only at
+  history-record time, so timing math overlaps training dispatch).
+  Participant counts are padded up to power-of-two buckets so a changing
+  number of participants hits at most O(log S) traces instead of one per
+  distinct count.
 * ``train_many`` — legacy form materializing per-satellite host pytrees
   (one ``device_get``); kept for callers that need pytrees.
+
+Datasets stay host-side in both pools: only the participants' shards are
+put on device per call (the whole (S, m, ...) tensor must not live in HBM
+for mega-constellation S).
 """
 from __future__ import annotations
 
@@ -26,8 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_models import SmallNetConfig
-from repro.core.modelbank import (FlatSpec, ModelBank, gather_rows,
-                                  pad_bucket_ids)
+from repro.core.modelbank import FlatSpec, ModelBank, pad_bucket_ids
 from repro.models import cnn
 from repro.optim import sgd, apply_updates
 
@@ -57,9 +66,9 @@ class ImageClassifierPool:
         opt = sgd(self.lr)
         self._true_sizes = [len(s) for s in self.shards]
         m = min(self._true_sizes)                     # equalize for vmap
-        sel = np.stack([s[:m] for s in self.shards])  # (S, m)
-        self._imgs = jnp.asarray(self.images[sel])    # (S, m, H, W, C)
-        self._labs = jnp.asarray(self.labels[sel])    # (S, m)
+        # host-side (S, m) index grid: participants' shards are gathered and
+        # put on device per call (the full dataset never lives in HBM)
+        self._sel = np.stack([s[:m] for s in self.shards])
 
         def _train_one(params, imgs, labs, key):
             state = opt.init(params)
@@ -77,6 +86,7 @@ class ImageClassifierPool:
             (params, _), losses = jax.lax.scan(step, (params, state), keys)
             return params, losses.mean()
 
+        self._train_one = _train_one
         # one jitted vmap over the whole constellation — params broadcast
         self._train_many = jax.jit(jax.vmap(_train_one, in_axes=(None, 0, 0, 0)))
 
@@ -87,21 +97,40 @@ class ImageClassifierPool:
     def data_size(self, sat: int) -> int:
         return int(self._true_sizes[sat])
 
+    def epoch_inputs(self, ids_np: np.ndarray):
+        """Host gather of the padded participants' shards for one call."""
+        sel = self._sel[ids_np]
+        return (self.images[sel], self.labels[sel])
+
+    def epoch_train_fn(self):
+        """Traceable (params, inputs, ids, seed) -> (stacked_params, losses)
+        for the fused epoch program (keys derived exactly as the stacked
+        path does, so the two paths stay bit-comparable)."""
+        train_one = self._train_one
+
+        def _fn(params, inputs, ids, seed):
+            imgs, labs = inputs
+            keys = jax.vmap(lambda s: jax.random.PRNGKey(
+                seed * jnp.uint32(9973) + s.astype(jnp.uint32)))(ids)
+            return jax.vmap(train_one,
+                            in_axes=(None, 0, 0, 0))(params, imgs, labs, keys)
+        return _fn
+
     def train_many_stacked(self, sat_ids: Sequence[int], params, seed: int):
         """Train the given satellites from the same global model in one
         batched call.  Returns (ModelBank of per-sat models — stacked (C, N)
-        on device, no host copy — and host losses (C,))."""
+        on device, no host copy — and *lazy* device losses (C,))."""
         ids_np, n = _pad_ids(sat_ids)
         if n == 0:
             return _empty_bank(params)
         ids = jnp.asarray(ids_np)
         keys = jax.vmap(lambda s: jax.random.PRNGKey(
             (np.uint32(seed) * np.uint32(9973)) + s.astype(jnp.uint32)))(ids)
-        stacked, losses = self._train_many(params,
-                                           gather_rows(self._imgs, ids),
-                                           gather_rows(self._labs, ids), keys)
+        imgs, labs = self.epoch_inputs(ids_np)
+        stacked, losses = self._train_many(params, jnp.asarray(imgs),
+                                           jnp.asarray(labs), keys)
         bank = ModelBank.from_stacked_tree(stacked)
-        return ModelBank(bank.spec, bank.stack[:n]), np.asarray(losses)[:n]
+        return ModelBank(bank.spec, bank.stack[:n]), losses[:n]
 
     def train_many(self, sat_ids: Sequence[int], params, seed: int):
         """Legacy form: (list of per-sat host param pytrees, losses)."""
@@ -121,10 +150,18 @@ class Evaluator:
 
     def __post_init__(self):
         self._acc = jax.jit(functools.partial(cnn.accuracy, cfg=self.cfg))
+        # device the evaluation set once, not per epoch
+        self._imgs = jnp.asarray(self.images)
+        self._labs = jnp.asarray(self.labels)
+
+    def eval_async(self, params):
+        """Lazy device scalar — the simulator blocks on it only when the
+        history row is finalized, so evaluation overlaps the next epoch's
+        host work."""
+        return self._acc(params, images=self._imgs, labels=self._labs)
 
     def __call__(self, params) -> float:
-        return float(self._acc(params, images=jnp.asarray(self.images),
-                               labels=jnp.asarray(self.labels)))
+        return float(self.eval_async(params))
 
 
 @dataclasses.dataclass
@@ -170,6 +207,7 @@ class LMPool:
             (params, _), losses = jax.lax.scan(step, (params, state), keys)
             return params, losses.mean()
 
+        self._train_one = _train_one
         self._train_many = jax.jit(jax.vmap(_train_one, in_axes=(None, 0, 0)))
 
     @property
@@ -179,18 +217,32 @@ class LMPool:
     def data_size(self, sat: int) -> int:
         return int(self._true_sizes[sat])
 
+    def epoch_inputs(self, ids_np: np.ndarray):
+        return self.tokens[self._sel[ids_np]]
+
+    def epoch_train_fn(self):
+        train_one = self._train_one
+
+        def _fn(params, toks, ids, seed):
+            keys = jax.vmap(lambda s: jax.random.PRNGKey(
+                seed * jnp.uint32(7919) + s.astype(jnp.uint32)))(ids)
+            return jax.vmap(train_one,
+                            in_axes=(None, 0, 0))(params, toks, keys)
+        return _fn
+
     def train_many_stacked(self, sat_ids: Sequence[int], params, seed: int):
-        """One batched call over the participant set -> (ModelBank, losses)."""
+        """One batched call over the participant set -> (ModelBank, lazy
+        device losses)."""
         ids_np, n = _pad_ids(sat_ids)
         if n == 0:
             return _empty_bank(params)
         ids = jnp.asarray(ids_np)
         keys = jax.vmap(lambda s: jax.random.PRNGKey(
             np.uint32(seed) * np.uint32(7919) + s.astype(jnp.uint32)))(ids)
-        toks = jnp.asarray(self.tokens[self._sel[ids_np]])
+        toks = jnp.asarray(self.epoch_inputs(ids_np))
         stacked, losses = self._train_many(params, toks, keys)
         bank = ModelBank.from_stacked_tree(stacked)
-        return ModelBank(bank.spec, bank.stack[:n]), np.asarray(losses)[:n]
+        return ModelBank(bank.spec, bank.stack[:n]), losses[:n]
 
     def train_many(self, sat_ids: Sequence[int], params, seed: int):
         bank, losses = self.train_many_stacked(sat_ids, params, seed)

@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.shard_compat import shard_map
+
 from repro.optim import sgd, apply_updates
 
 
@@ -95,7 +97,7 @@ def make_fl_round(loss_fn: Callable, mesh: Mesh, *, local_iters: int = 4,
         return new_global, mean_loss
 
     batch_spec = P(axes if len(axes) > 1 else axes[0])
-    fl_round = jax.shard_map(
+    fl_round = shard_map(
         per_shard, mesh=mesh,
         in_specs=(P(), batch_spec, batch_spec),
         out_specs=(P(), P()),

@@ -27,6 +27,15 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_data_mesh():
+    """1-D "data" mesh over every local device (trailing size-1 "model"
+    axis so the shared rules resolve) — the layout the fused epoch program
+    (``core/epoch_step.py``) shards the participant axis over.  On a
+    single-device host this is the identity mesh: every shape and result
+    stays bit-identical to the unsharded path."""
+    return make_host_mesh(data=len(jax.devices()), model=1)
+
+
 # TPU v5e hardware constants used by the roofline analysis (per chip).
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # B/s

@@ -176,6 +176,14 @@ def batch_shardings(batch, mesh: Mesh, rules: Dict[str, object]):
     return jax.tree.map(spec_for, batch)
 
 
+def bank_sharding(mesh: Mesh) -> NamedSharding:
+    """The federated model bank's (C, N) layout: the client/participant
+    axis shards over "data", the flattened-parameter axis is replicated
+    (each device owns whole rows — contractions reduce over C with one
+    psum; see ``core/epoch_step.py``)."""
+    return NamedSharding(mesh, P("data", None))
+
+
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 

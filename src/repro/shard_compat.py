@@ -1,0 +1,20 @@
+"""``shard_map`` across jax versions.
+
+The top-level ``jax.shard_map`` (with its ``check_vma`` kwarg) landed after
+the 0.4.x series; on older jax the same transform lives at
+``jax.experimental.shard_map.shard_map`` with the kwarg spelled
+``check_rep``.  Every shard_map call site in this repo goes through this
+wrapper so the code runs on both.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

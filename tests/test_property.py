@@ -1,9 +1,14 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+Skips cleanly when ``hypothesis`` is not installed (it is not part of the
+runtime container; CI installs it)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.aggregation import SatelliteMeta, asyncfleo_aggregate, fedavg
 from repro.core.constellation import WalkerDelta
