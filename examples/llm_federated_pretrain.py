@@ -36,6 +36,11 @@ def main():
     ap.add_argument("--local-iters", type=int, default=4)
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--size-mode", choices=["on_board", "trained"],
+                    default="on_board",
+                    help="what D_n the eq. 13/14 weights use: the full "
+                         "on-board shard (paper) or the truncated count "
+                         "the vmap trained on (DESIGN.md §3)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced().replace(
@@ -50,7 +55,7 @@ def main():
                         cfg.vocab_size).reshape(-1, args.seq)
     shards = np.array_split(np.arange(len(toks)), const.num_sats)
     pool = LMPool(cfg, toks, shards, local_iters=args.local_iters,
-                  batch_size=4)
+                  batch_size=4, size_mode=args.size_mode)
 
     params = R.init_params(jax.random.PRNGKey(0), cfg)
     n_params = sum(int(np.prod(l.shape))

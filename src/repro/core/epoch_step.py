@@ -125,6 +125,7 @@ class EpochStepProgram:
     train_fn: Callable[..., Tuple[Any, jnp.ndarray]]
     mesh: Optional[Mesh] = None
     donate: bool = True
+    use_kernel: bool = False           # fed_agg Pallas contraction (below)
 
     dispatches: int = 0                # fused one-dispatch epochs
     fallback_dispatches: int = 0       # epochs that needed train+agg split
@@ -148,12 +149,22 @@ class EpochStepProgram:
         stack = (stacked if getattr(stacked, "ndim", None) == 2
                  else self.spec.flatten_stacked(stacked))
         if sharded:
+            # the shard_map psum keeps the XLA contraction — the Pallas
+            # kernel is single-device (per-shard pallas_call under
+            # shard_map is future work; the flag is ignored here)
             stack = jax.lax.with_sharding_constraint(
                 stack, bank_sharding(mesh))
             bank_term = sharded_contract(wv_bank, stack, mesh)
+            new_w = base_w * w_flat + bank_term + wv_carry @ carry
+        elif self.use_kernel:
+            # route eq. 14 through the fed_agg Pallas kernel, inlined into
+            # the fused program: the bank pass folds in the (donated) base
+            # model, the carry pass accumulates onto its output
+            from repro.kernels.fed_agg import ops as agg_ops
+            new_w = agg_ops.fed_agg(stack, wv_bank, w_flat, base_w)
+            new_w = agg_ops.fed_agg(carry, wv_carry, new_w, 1.0)
         else:
-            bank_term = wv_bank @ stack
-        new_w = base_w * w_flat + bank_term + wv_carry @ carry
+            new_w = base_w * w_flat + wv_bank @ stack + wv_carry @ carry
         if kpad:
             c, n = stack.shape
             if blocked_m:
@@ -215,7 +226,8 @@ class EpochStepProgram:
 
 
 def make_epoch_program(trainer, params, mesh: Optional[Mesh] = None,
-                       *, donate: bool = True) -> Optional[EpochStepProgram]:
+                       *, donate: bool = True,
+                       use_kernel: bool = False) -> Optional[EpochStepProgram]:
     """Build (or reuse) the fused program for a trainer exposing the
     fused-epoch protocol (``epoch_train_fn`` + ``epoch_inputs``); None
     otherwise.  Programs are cached on the trainer so repeated simulations
@@ -231,9 +243,10 @@ def make_epoch_program(trainer, params, mesh: Optional[Mesh] = None,
             trainer._epoch_programs = cache
         except AttributeError:        # trainer forbids attributes: no reuse
             pass
-    key = (spec, mesh, donate)        # Mesh is hashable; id() could collide
-    prog = cache.get(key)
+    key = (spec, mesh, donate, use_kernel)   # Mesh is hashable; id() could
+    prog = cache.get(key)                    # collide
     if prog is None:
         prog = cache[key] = EpochStepProgram(spec, fn(), mesh=mesh,
-                                             donate=donate)
+                                             donate=donate,
+                                             use_kernel=use_kernel)
     return prog

@@ -42,7 +42,6 @@ import dataclasses
 import time
 from typing import Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -74,6 +73,7 @@ class SimConfig:
     use_model_bank: bool = True        # stacked path when trainer supports it
     use_fused_step: bool = True        # one donated program/epoch (DESIGN §6)
     mesh: Optional[object] = None      # jax Mesh with a "data" axis, or None
+    event_driven: bool = False         # run() delegates to sched.runtime
 
 
 @dataclasses.dataclass
@@ -99,16 +99,22 @@ class FLSimulation:
                                            sim.duration_s, sim.dt_s)
         self.topo = RingOfStars(self.constellation, self.nodes, self.timeline)
         self.prop = PropagationModel(self.topo, sim.link or LinkModel())
+        # the compiled contact plan owns the downlink/uplink timing rules
+        # (including the use_isl switch) and is shared with the
+        # event-driven runtime; lazy import keeps core <-> sched acyclic
+        from repro.sched.contacts import ContactPlan
+        self.plan = ContactPlan(self.constellation, self.nodes,
+                                self.timeline, self.topo, self.prop,
+                                use_isl=spec.use_isl)
         self.grouping = GroupingState(num_groups=spec.num_groups)
         self.orbit_ids = self.constellation.orbit_ids()
         # persistent per-satellite bookkeeping
         self.last_epoch_included: Dict[int, int] = {}
         # legacy path: (arrival_t, sat, host pytree, trained_from_epoch)
         self.pending: List[tuple] = []
-        # stacked path: stragglers live in a small host matrix (O(late)
-        # rows, not O(S)); fused path keeps them as a small DEVICE matrix
-        # so nothing blocks — both re-enter aggregation as one fused term
-        self._pend_np: Optional[np.ndarray] = None       # (L, N) float32
+        # stacked + fused paths: stragglers live in a small DEVICE matrix
+        # (O(late) rows, not O(S)) so nothing blocks — they re-enter
+        # aggregation as one fused term
         self._pend_dev = None                            # (L, N) device
         self._pend_meta: List[tuple] = []      # (arrival_t, sat, epoch)
         self._spec = None              # FlatSpec of the stacked/fused path
@@ -134,33 +140,11 @@ class FLSimulation:
     # ------------------------------------------------------------------
 
     def _downlink(self, t0: float, bits: float, source: int) -> np.ndarray:
-        if self.spec.use_isl:
-            return self.prop.downlink_times(t0, bits, source)
-        # no ISL: each satellite waits for direct visibility (vectorized)
-        S = self.constellation.num_sats
-        sats = np.arange(S)
-        tv, ps = self.timeline.next_visible_after(sats, t0)
-        recv = np.full(S, np.inf)
-        ok = np.isfinite(tv)
-        for h in np.unique(ps[ok]):
-            m = ok & (ps == h)
-            d = self.topo.sat_ps_distances(sats[m], int(h), tv[m])
-            recv[m] = tv[m] + self.prop.link.total_delay(bits, d)
-        return recv
+        # timing rules live on the compiled contact plan (sched/contacts.py)
+        return self.plan.downlink_times(t0, bits, source)
 
     def _uplink_many(self, sats, t_done, bits: float, sink: int):
-        if self.spec.use_isl:
-            return self.prop.uplink_many(sats, t_done, bits, sink)
-        sats = np.asarray(sats, dtype=np.int64)
-        tv, ps = self.timeline.next_visible_after(sats, t_done)
-        out = np.full(len(sats), np.inf)
-        hap = np.asarray(ps, dtype=np.int64)
-        ok = np.isfinite(tv)
-        for h in np.unique(hap[ok]):
-            m = ok & (hap == h)
-            d = self.topo.sat_ps_distances(sats[m], int(h), tv[m])
-            out[m] = tv[m] + self.prop.link.total_delay(bits, d)
-        return out, hap
+        return self.plan.uplink_times(sats, t_done, bits, sink)
 
     def _combine(self, segments, weights, base_flat, base_weight: float):
         """Map metas-indexed ``weights`` onto per-segment weight vectors and
@@ -264,31 +248,54 @@ class FLSimulation:
 
     # ---- fused path (one donated program per epoch, DESIGN.md §6) ----
 
+    def _arrival_times(self, participants, recv, bits, sink):
+        """Participant timing for one round: padded bank ids, per-row
+        training-done times, raw per-row sink arrival times, and the
+        sorted finite (t_arr, sat, row) arrival triples.  ONE shared
+        implementation for the epoch loop and the event runtime — their
+        parity contract (tests/test_sched.py) depends on identical
+        timing math, so neither may fork this."""
+        ids_np, _n = pad_bucket_ids(participants)
+        t_done = recv[participants] + self.sim.train_time_s
+        t_arr, _haps = self._uplink_many(participants, t_done, bits, sink)
+        arrivals = [(float(t_arr[k]), s, k)
+                    for k, s in enumerate(participants)
+                    if np.isfinite(t_arr[k])]
+        arrivals.sort(key=lambda a: a[0])
+        return ids_np, t_done, t_arr, arrivals
+
     def _fused_epoch(self, prog, beta, participants, recv, t, bits, sink):
-        from repro.core.epoch_step import carry_capacity, next_pow2
-
-        sim, spec = self.sim, self.spec
-        seed = sim.seed * 1000 + beta
-        self._spec = prog.spec
-        N = prog.spec.num_params
-
+        """One epoch-loop iteration on the fused path: propagation timing
+        and the `_trigger` split happen here, everything after the trigger
+        is the shared `_fused_commit` (which the event-driven runtime calls
+        directly with policy-chosen trigger instants)."""
         # all host work happens BEFORE the dispatch: propagation timing,
         # trigger, straggler bookkeeping, weight-vector metadata math
         arrivals = []
         ids_np = np.zeros(0, np.int32)
         if participants:
             with self._seg("timing"):
-                ids_np, _n = pad_bucket_ids(participants)
-                t_done = recv[participants] + sim.train_time_s
-                t_arr_vec, _haps = self._uplink_many(participants, t_done,
-                                                     bits, sink)
-            arrivals = [(float(t_arr_vec[k]), s, k)
-                        for k, s in enumerate(participants)
-                        if np.isfinite(t_arr_vec[k])]
-            arrivals.sort(key=lambda a: a[0])
+                ids_np, _td, _ta, arrivals = self._arrival_times(
+                    participants, recv, bits, sink)
         if not arrivals and not self._pend_meta:
             return None
         t_agg, used, late = self._trigger(arrivals, t)
+        return self._fused_commit(prog, beta, ids_np, participants, t_agg,
+                                  used, late)
+
+    def _fused_commit(self, prog, beta, ids_np, participants, t_agg, used,
+                      late):
+        """Post-trigger tail of a fused epoch: metas/carry bookkeeping,
+        grouping metadata, weight vectors, the ONE donated dispatch, and
+        the straggler carry-over.  ``used``/``late`` are (t_arr, sat, bank
+        row) triples split at ``t_agg`` — by `_trigger` on the epoch loop,
+        by a trigger policy in the event runtime (`sched/runtime.py`)."""
+        from repro.core.epoch_step import carry_capacity, next_pow2
+
+        sim, spec = self.sim, self.spec
+        seed = sim.seed * 1000 + beta
+        self._spec = prog.spec
+        N = prog.spec.num_params
         c_idx, k_idx = self._carried_split(t_agg)
 
         metas = [SatelliteMeta(s, self.trainer.data_size(s),
@@ -509,27 +516,32 @@ class FLSimulation:
         bank_rows = [k for (_, _, k) in used] + [-1] * len(c_idx)
         carry_rows = [-1] * len(used) + list(range(len(c_idx)))
         with self._seg("carry"):
-            carry_np = self._pend_np[np.asarray(c_idx)] if c_idx else None
-            # retire carried stragglers, enqueue this epoch's late rows
-            # (bucketed gather + one small device_get — O(late), not O(S))
-            keep_np = self._pend_np[np.asarray(k_idx)] if k_idx else None
+            carry_seg = (gather_rows(self._pend_dev,
+                                     np.asarray(c_idx, np.int32))
+                         if c_idx else None)
+            # retire carried stragglers, enqueue this epoch's late rows —
+            # all lazy device gathers, O(late) rows; the old path staged
+            # them in a host matrix (a (late, N) device->host->device
+            # round-trip per epoch that an accelerator host can't hide)
+            keep_dev = (gather_rows(self._pend_dev,
+                                    np.asarray(k_idx, np.int32))
+                        if k_idx else None)
             keep_meta = [self._pend_meta[i] for i in k_idx]
             if late:
-                lk, n_late = pad_bucket_ids([k for (_, _, k) in late])
-                late_np = np.asarray(jax.device_get(
-                    gather_rows(bank.stack, lk)))[:n_late]
-                keep_np = (late_np if keep_np is None else
-                           np.concatenate([keep_np, late_np]))
+                late_ids = np.asarray([k for (_, _, k) in late], np.int32)
+                late_dev = gather_rows(bank.stack, late_ids)
+                keep_dev = (late_dev if keep_dev is None else
+                            jnp.concatenate([keep_dev, late_dev]))
                 keep_meta += [(ta, s, beta) for (ta, s, _k) in late]
-            self._pend_np, self._pend_meta = keep_np, keep_meta
+            self._pend_dev, self._pend_meta = keep_dev, keep_meta
 
         keep = agg.dedup_indices(metas)
         if len(keep) < len(metas):
             metas = [metas[i] for i in keep]
             bank_rows = [bank_rows[i] for i in keep]
             carry_rows = [carry_rows[i] for i in keep]
-        carry_dev = (jnp.asarray(carry_np)
-                     if carry_np is not None
+        carry_dev = (carry_seg
+                     if carry_seg is not None
                      and any(r >= 0 for r in carry_rows) else None)
         segments = [(bank.stack if bank is not None else None, bank_rows),
                     (carry_dev, carry_rows)]
@@ -653,24 +665,57 @@ class FLSimulation:
 
     # ------------------------------------------------------------------
 
-    def run(self, w0, max_epochs: int = 30,
-            target_accuracy: Optional[float] = None) -> List[EpochRecord]:
-        sim, spec = self.sim, self.spec
+    def _init_run(self, w0):
+        """Shared run-state reset for the epoch loop and the event-driven
+        runtime.  Returns (model bits, fused program or None, stacked?)."""
         bits = model_bits(w0)
         self.grouping.set_reference(w0)
-        stacked = sim.use_model_bank and hasattr(self.trainer,
-                                                 "train_many_stacked")
+        stacked = self.sim.use_model_bank and hasattr(self.trainer,
+                                                      "train_many_stacked")
         fused = None
-        if stacked and sim.use_fused_step:
+        if stacked and self.sim.use_fused_step:
             from repro.core.epoch_step import make_epoch_program
-            fused = make_epoch_program(self.trainer, w0, mesh=sim.mesh)
-            self._fused_prog = fused
-        w_tree = w0                       # pytree view (trainer/evaluator)
+            fused = make_epoch_program(self.trainer, w0, mesh=self.sim.mesh,
+                                       use_kernel=self.spec.use_agg_kernel)
+        self._fused_prog = fused
         self._w_flat = None               # flat device view (stacked/fused)
         self._dist_pending = None
         if stacked:
             self._spec = self._spec or FlatSpec.of(w0)
             self._w_flat = self._spec.flatten(w0)
+        return bits, fused, stacked
+
+    def _record_epoch(self, history: List[EpochRecord], beta: int,
+                      t_agg: float, metas, info, lazy_eval: bool, w_tree):
+        """Evaluate + append one epoch's history row (shared by the epoch
+        loop and the event runtime so the records stay bit-identical).
+        Returns the recorded accuracy (a lazy device scalar when
+        ``lazy_eval``)."""
+        for meta in metas:
+            self.last_epoch_included[meta.sat_id] = beta
+        with self._seg("eval"):
+            if self.evaluator is None:
+                acc = float("nan")
+            elif lazy_eval:
+                acc = self.evaluator.eval_async(w_tree)  # lazy device
+            else:
+                acc = float(self.evaluator(w_tree))
+        history.append(EpochRecord(beta, t_agg, acc, len(metas),
+                                   float(info.get("gamma", 1.0)),
+                                   int(info.get("stale_groups", 0))))
+        return acc
+
+    def run(self, w0, max_epochs: int = 30,
+            target_accuracy: Optional[float] = None) -> List[EpochRecord]:
+        sim, spec = self.sim, self.spec
+        if sim.event_driven:
+            # the event-driven async runtime replaces the epoch loop as
+            # the top-level driver (DESIGN.md §7)
+            from repro.sched.runtime import EventDrivenRuntime
+            return EventDrivenRuntime(self).run(
+                w0, max_epochs, target_accuracy=target_accuracy)
+        bits, fused, stacked = self._init_run(w0)
+        w_tree = w0                       # pytree view (trainer/evaluator)
         t = 0.0
         source = 0
         history: List[EpochRecord] = []
@@ -710,19 +755,8 @@ class FLSimulation:
             if spec.agg_mode == "interval":
                 t_agg = max(t_agg, t + spec.interval_s)
 
-            for meta in metas:
-                self.last_epoch_included[meta.sat_id] = beta
-
-            with self._seg("eval"):
-                if self.evaluator is None:
-                    acc = float("nan")
-                elif lazy_eval:
-                    acc = self.evaluator.eval_async(w_tree)  # lazy device
-                else:
-                    acc = float(self.evaluator(w_tree))
-            history.append(EpochRecord(beta, t_agg, acc, len(metas),
-                                       float(info.get("gamma", 1.0)),
-                                       int(info.get("stale_groups", 0))))
+            acc = self._record_epoch(history, beta, t_agg, metas, info,
+                                     lazy_eval, w_tree)
             t = t_agg
             source, sink = sink, source            # §IV-B3 role swap
             if target_accuracy is not None and acc >= target_accuracy:

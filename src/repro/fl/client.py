@@ -172,6 +172,13 @@ class LMPool:
     set trains in one jitted vmap (like ``ImageClassifierPool``) — the
     per-satellite loop of the seed retraced ``_train`` whenever a shard's
     token count differed.
+
+    ``size_mode`` picks what ``data_size`` (the D_n of eqs. 13/14) reports:
+    ``"on_board"`` (default) keeps the paper's reading — the full shard a
+    satellite holds — while ``"trained"`` reports the truncated per-call
+    sequence count the vmap actually trained on, making aggregation weights
+    proportional to gradient contributions instead of data held
+    (DESIGN.md §3 records the trade-off).
     """
     model_cfg: object                  # ModelConfig
     tokens: np.ndarray                 # (N_seqs, seq_len)
@@ -179,8 +186,13 @@ class LMPool:
     local_iters: int = 4
     batch_size: int = 4
     lr: float = 1e-3
+    size_mode: str = "on_board"        # "on_board" (paper D_n) | "trained"
 
     def __post_init__(self):
+        if self.size_mode not in ("on_board", "trained"):
+            raise ValueError(
+                f"size_mode must be 'on_board' or 'trained', "
+                f"got {self.size_mode!r}")
         from repro.models import registry as R
         from repro.optim import adamw
         opt = adamw(self.lr)
@@ -215,7 +227,9 @@ class LMPool:
         return len(self.shards)
 
     def data_size(self, sat: int) -> int:
-        return int(self._true_sizes[sat])
+        if self.size_mode == "trained":
+            return int(self._sel.shape[1])     # truncated common length
+        return int(self._true_sizes[sat])      # full on-board shard (D_n)
 
     def epoch_inputs(self, ids_np: np.ndarray):
         return self.tokens[self._sel[ids_np]]

@@ -13,6 +13,7 @@ fedisl-ideal       yes    yes     no         fedavg       GS at the North Pole
 fedsat             no     no      no         per-arrival  GS at the North Pole
 fedspace           no     no      no         interval     GS, arbitrary
 fedhap             yes    yes     no         fedavg       1 HAP
+fedasync           no     yes     no         per-arrival  GS, arbitrary
 =================  ====== ======= ========== ============ =====================
 
 FedSpace's real scheduler optimizes the schedule from uploaded raw-data
@@ -36,6 +37,10 @@ class StrategySpec:
     num_groups: int = 3
     strict_paper_eq14: bool = False
     use_agg_kernel: bool = False     # route eq. 14 through the Pallas kernel
+    # event-runtime trigger policy (sched/policies.py): "" derives it from
+    # sync/agg_mode — sync -> barrier, per_arrival -> FedAsync, else the
+    # AsyncFLEO idle-timeout window
+    sched_policy: str = ""
 
 
 STRATEGIES = {
@@ -53,6 +58,12 @@ STRATEGIES = {
     "fedspace": StrategySpec("fedspace", False, False, False,
                              "interval", "gs"),
     "fedhap": StrategySpec("fedhap", True, True, False, "fedavg", "hap"),
+    # FedAsync-style baseline: immediate per-arrival aggregation at a GS
+    # PS, full ISL relay — only meaningfully different from fedsat under
+    # the event-driven runtime, where every MODEL_ARRIVAL triggers its own
+    # aggregation instead of a batched window
+    "fedasync": StrategySpec("fedasync", False, True, False,
+                             "per_arrival", "gs", sched_policy="per_arrival"),
 }
 
 

@@ -1,0 +1,13 @@
+# Event-driven async FL scheduling: contact plans compiled from orbital
+# geometry, a priority-queue runtime reusing the fused epoch program, and
+# pluggable trigger policies (AsyncFLEO / sync barrier / FedAsync).
+from repro.sched.contacts import ContactPlan, ContactWindow
+from repro.sched.events import Event, EventKind, EventQueue
+from repro.sched.policies import (AsyncFLEOPolicy, FedAsyncPolicy, POLICIES,
+                                  SyncBarrierPolicy, make_policy)
+from repro.sched.runtime import EventDrivenRuntime, RoundState
+
+__all__ = ["ContactPlan", "ContactWindow", "Event", "EventKind",
+           "EventQueue", "AsyncFLEOPolicy", "SyncBarrierPolicy",
+           "FedAsyncPolicy", "POLICIES", "make_policy",
+           "EventDrivenRuntime", "RoundState"]

@@ -1,0 +1,224 @@
+"""Contact-plan compilation: orbital geometry -> schedulable link windows.
+
+A *contact plan* is the standard artifact of DTN / satellite-network
+scheduling (LRSIM's dynamic-state generation follows the same shape): the
+constellation geometry, visibility grid and link model are compiled ONCE
+into sorted availability windows, and everything downstream — the
+event-driven runtime (`sched/runtime.py`), benchmarks, exports — consumes
+the plan instead of re-deriving geometry.
+
+``ContactPlan`` bundles three things:
+
+* **windows** — run-length-encoded sat<->PS visibility intervals
+  ``[t_start, t_end)`` (from ``VisibilityTimeline.grid``), each annotated
+  with the one-hop link delay at window start for a nominal payload.
+  Compiled lazily (one pass over the grid) and cached.
+* **ISL / IHL availability** — intra-orbit ISL rings are permanently
+  available (adjacent neighbors, §IV-A), so they are a constant hop delay,
+  not windows; the HAP ring likewise.
+* **timing evaluators** — ``downlink_times`` / ``uplink_times`` answer
+  "when does satellite n hold the global model" / "when does n's local
+  model reach the sink" for a *specific* payload and instant, delegating
+  the fine-grained delay math to the compiled-in ``PropagationModel``
+  (the plan's windows and the evaluators read the same grid, so they never
+  disagree).  The ``use_isl`` switch (strategies without inter-satellite
+  links wait for direct visibility) lives here, moved out of the
+  simulator.
+
+`core/simulator.py` routes its propagation timing through a plan, and the
+event-driven runtime schedules its wake-ups from the same object — one
+compiled view of "who can talk to whom, when, at what delay".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.constellation import GroundNode, WalkerDelta
+from repro.core.links import LinkModel
+from repro.core.propagation import PropagationModel
+from repro.core.topology import RingOfStars
+from repro.core.visibility import VisibilityTimeline
+
+
+@dataclasses.dataclass(frozen=True)
+class ContactWindow:
+    """One sat<->PS visibility interval ``[t_start, t_end)`` with the
+    link delay (transmission + propagation for the plan's nominal payload)
+    evaluated at window start."""
+    sat: int
+    node: int
+    t_start: float
+    t_end: float
+    delay_s: float
+
+
+@dataclasses.dataclass
+class ContactPlan:
+    """Compiled contact plan over one simulation horizon.
+
+    Construct via :meth:`compile` (builds timeline/topology/propagation
+    from a constellation + PS nodes) or directly from an existing
+    simulator's objects — ``FLSimulation`` does the latter so the epoch
+    loop and the event runtime share one plan.
+    """
+    constellation: WalkerDelta
+    nodes: List[GroundNode]
+    timeline: VisibilityTimeline
+    topo: RingOfStars
+    prop: PropagationModel
+    use_isl: bool = True
+    nominal_bits: float = 0.0          # payload for window delay annotation
+
+    _windows: Optional[List[ContactWindow]] = dataclasses.field(
+        default=None, repr=False)
+
+    # ---- construction ------------------------------------------------------
+
+    @classmethod
+    def compile(cls, constellation: WalkerDelta, nodes: List[GroundNode],
+                duration_s: float, dt_s: float = 10.0,
+                link: Optional[LinkModel] = None, *, use_isl: bool = True,
+                nominal_bits: float = 0.0) -> "ContactPlan":
+        timeline = VisibilityTimeline(constellation, nodes, duration_s, dt_s)
+        topo = RingOfStars(constellation, nodes, timeline)
+        prop = PropagationModel(topo, link or LinkModel())
+        return cls(constellation, nodes, timeline, topo, prop,
+                   use_isl=use_isl, nominal_bits=nominal_bits)
+
+    # ---- windows (lazy RLE over the visibility grid) -----------------------
+
+    def windows(self) -> List[ContactWindow]:
+        """Sorted (by t_start, then sat) sat<->PS contact windows."""
+        if self._windows is None:
+            self._windows = self._compile_windows()
+        return self._windows
+
+    def _compile_windows(self) -> List[ContactWindow]:
+        tl = self.timeline
+        grid = tl.grid                                   # (T, S, P) bool
+        T = grid.shape[0]
+        dt = tl.dt_s
+        out: List[ContactWindow] = []
+        # per (node) batched RLE: transitions of the padded column
+        for p in range(grid.shape[2]):
+            col = grid[:, :, p]                          # (T, S)
+            pad = np.zeros((1, col.shape[1]), dtype=np.int8)
+            d = np.diff(np.concatenate([pad, col.astype(np.int8), pad]),
+                        axis=0)                          # (T+1, S)
+            starts = np.argwhere(d == 1)                 # (n, 2): (row, sat)
+            ends = np.argwhere(d == -1)
+            if len(starts) == 0:
+                continue
+            # argwhere is row-major sorted; regroup per sat so the k-th
+            # start pairs with the k-th end of the same column
+            order_s = np.lexsort((starts[:, 0], starts[:, 1]))
+            order_e = np.lexsort((ends[:, 0], ends[:, 1]))
+            s_rows, s_sats = starts[order_s, 0], starts[order_s, 1]
+            e_rows = ends[order_e, 0]
+            t0 = tl.times[s_rows]
+            # exclusive end: one step past the last visible sample, clamped
+            t1 = tl.times[np.minimum(e_rows, T - 1)]
+            t1 = np.where(e_rows >= T, tl.times[T - 1] + dt, t1)
+            dist = self.topo.sat_ps_distances(s_sats, p, t0)
+            delay = self.prop.link.total_delay(self.nominal_bits, dist)
+            delay = np.broadcast_to(np.asarray(delay, np.float64),
+                                    s_sats.shape)
+            out.extend(ContactWindow(int(s), p, float(a), float(b), float(dl))
+                       for s, a, b, dl in zip(s_sats, t0, t1, delay))
+        out.sort(key=lambda w: (w.t_start, w.sat, w.node))
+        return out
+
+    # ---- plan-level queries -------------------------------------------------
+
+    @property
+    def num_sats(self) -> int:
+        return self.constellation.num_sats
+
+    @property
+    def is_degenerate(self) -> bool:
+        """True when every satellite sees a PS at every grid step — the
+        all-visible plan used by the runtime-vs-epoch-loop parity tests."""
+        return bool(self.timeline.grid.any(axis=2).all())
+
+    def isl_hop_delay(self, bits: float) -> float:
+        """Intra-orbit ISL ring hop delay (permanently available)."""
+        return self.prop.isl_hop_delay(bits)
+
+    def next_contact(self, sats, t):
+        """Vectorized earliest contact at/after ``t``: (times, ps ids),
+        inf / -1 for satellites never visible again within the horizon."""
+        return self.timeline.next_visible_after(sats, t)
+
+    def next_any_contact(self, t: float) -> Optional[float]:
+        """Earliest time >= t when ANY satellite sees a PS (None if the
+        plan is exhausted) — the runtime's idle-skip wake-up."""
+        tv, _ps = self.timeline.next_visible_after(
+            np.arange(self.constellation.num_sats), t)
+        tmin = float(np.min(tv))
+        return None if not np.isfinite(tmin) else tmin
+
+    def coverage_fraction(self) -> float:
+        """Mean fraction of grid steps with any PS in view, over sats."""
+        return float(self.timeline.grid.any(axis=2).mean())
+
+    def summary(self) -> Dict:
+        """Plan statistics for benchmarks / exports (windows compiled on
+        first call)."""
+        ws = self.windows()
+        return {
+            "num_sats": self.constellation.num_sats,
+            "num_ps": len(self.nodes),
+            "duration_s": float(self.timeline.duration_s),
+            "dt_s": float(self.timeline.dt_s),
+            "use_isl": bool(self.use_isl),
+            "num_windows": len(ws),
+            "coverage_fraction": self.coverage_fraction(),
+            "mean_window_s": (float(np.mean([w.t_end - w.t_start
+                                             for w in ws])) if ws else 0.0),
+            "is_degenerate": self.is_degenerate,
+        }
+
+    def to_dicts(self) -> List[Dict]:
+        """Windows as plain dicts (JSON-exportable contact-plan format,
+        DESIGN.md §7)."""
+        return [dataclasses.asdict(w) for w in self.windows()]
+
+    # ---- model-propagation timing (moved from FLSimulation) ----------------
+
+    def downlink_times(self, t0: float, bits: float,
+                       source: int) -> np.ndarray:
+        """Per-satellite receive time of the global model sent from
+        ``source`` at ``t0`` (Alg. 1 with ISL relay; plain next-visibility
+        per satellite for ISL-less strategies)."""
+        if self.use_isl:
+            return self.prop.downlink_times(t0, bits, source)
+        S = self.constellation.num_sats
+        sats = np.arange(S)
+        tv, ps = self.timeline.next_visible_after(sats, t0)
+        recv = np.full(S, np.inf)
+        ok = np.isfinite(tv)
+        for h in np.unique(ps[ok]):
+            m = ok & (ps == h)
+            d = self.topo.sat_ps_distances(sats[m], int(h), tv[m])
+            recv[m] = tv[m] + self.prop.link.total_delay(bits, d)
+        return recv
+
+    def uplink_times(self, sats, t_done, bits: float,
+                     sink: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Arrival times of the given satellites' local models at the sink
+        (and the first-receiving PS ids); inf / -1 where unreachable."""
+        if self.use_isl:
+            return self.prop.uplink_many(sats, t_done, bits, sink)
+        sats = np.asarray(sats, dtype=np.int64)
+        tv, ps = self.timeline.next_visible_after(sats, t_done)
+        out = np.full(len(sats), np.inf)
+        hap = np.asarray(ps, dtype=np.int64)
+        ok = np.isfinite(tv)
+        for h in np.unique(hap[ok]):
+            m = ok & (hap == h)
+            d = self.topo.sat_ps_distances(sats[m], int(h), tv[m])
+            out[m] = tv[m] + self.prop.link.total_delay(bits, d)
+        return out, hap

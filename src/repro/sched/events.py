@@ -1,0 +1,72 @@
+"""Discrete-event primitives for the async FL runtime (DESIGN.md §7).
+
+Four event kinds drive a federated round (FLGo's ``system_simulator``
+separates virtual-clock state the same way):
+
+* ``TRAIN_DONE``     — a satellite finished its J local iterations;
+* ``MODEL_ARRIVAL``  — a local model reached the sink PS (after the
+  uplink relay chain);
+* ``TRIGGER_TIMEOUT``— a policy-scheduled aggregation deadline fired
+  (AsyncFLEO's idle timeout, the sync barrier's straggler stall);
+* ``SINK_HANDOFF``   — a round committed and PS roles swap (§IV-B3);
+  its handler opens the next round.
+
+``EventQueue`` is a plain binary heap keyed on (time, sequence) — the
+sequence number makes same-instant pops deterministic (FIFO), which the
+runtime-vs-epoch-loop parity tests rely on.  Events are immutable;
+handlers look up mutable round state on the runtime by ``round_idx``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+from typing import Dict, List, Optional
+
+
+class EventKind(enum.IntEnum):
+    TRAIN_DONE = 0
+    MODEL_ARRIVAL = 1
+    TRIGGER_TIMEOUT = 2
+    SINK_HANDOFF = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One scheduled occurrence.  ``sat`` / ``row`` are payload for the
+    training/arrival kinds (``row`` is the satellite's row in the round's
+    padded training bank); -1 where not applicable."""
+    time: float
+    kind: EventKind
+    round_idx: int
+    sat: int = -1
+    row: int = -1
+
+    def __post_init__(self):
+        assert self.time == self.time, "event time must not be NaN"
+
+
+class EventQueue:
+    """Min-heap of events ordered by (time, push sequence)."""
+
+    def __init__(self):
+        self._heap: List = []
+        self._seq = 0
+        self.counts: Dict[str, int] = {k.name: 0 for k in EventKind}
+
+    def push(self, ev: Event) -> None:
+        self.counts[ev.kind.name] += 1
+        heapq.heappush(self._heap, (ev.time, self._seq, ev))
+        self._seq += 1
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)[2]
+
+    def peek_time(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

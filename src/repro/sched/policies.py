@@ -1,0 +1,136 @@
+"""Pluggable aggregation-trigger policies for the event runtime.
+
+A policy decides WHEN the sink PS aggregates; WHAT the update computes
+(eqs. 4/13/14, the per-arrival EMA, the interval emulation) stays with the
+strategy's ``agg_mode`` (`core/aggregation.epoch_weight_vector`), so a
+policy is pure scheduling logic over a round's expected/observed arrivals:
+
+* ``round_deadline``  — absolute TRIGGER_TIMEOUT to schedule when a round
+  opens (the sync barrier's straggler stall; the idle timeout of a round
+  that only drains carried stragglers), or None;
+* ``on_arrival``      — absolute trigger time a MODEL_ARRIVAL should
+  schedule (AsyncFLEO schedules first-arrival + idle timeout; the sync
+  barrier fires when the last expected model lands; FedAsync fires on
+  every arrival), or None;
+* ``split``           — at trigger time, the (t_agg, used, late) partition
+  of the round's arrivals.  AsyncFLEO and the sync barrier delegate to
+  ``FLSimulation._trigger`` so the event runtime reproduces the epoch
+  loop's aggregation instants *exactly* (the parity contract in
+  tests/test_sched.py);
+* ``round_complete``  — whether a commit closes the round (PS roles swap).
+
+Policies are selected from the strategy table (`fl/strategies.py`,
+``StrategySpec.sched_policy``): AsyncFLEO strategies map to the
+idle-timeout policy, synchronous FedAvg baselines (ground-station FL as in
+Razmi et al.) to the barrier, and the FedAsync-style ``fedasync`` /
+``fedsat`` strategies to per-arrival aggregation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+Arrival = Tuple[float, int, int]                 # (t_arrival, sat, bank row)
+
+
+@dataclasses.dataclass
+class AsyncFLEOPolicy:
+    """AsyncFLEO (Alg. 2 trigger): the first arrival of a round opens a
+    collection window of ``agg_timeout_s``; everything that lands inside
+    aggregates in ONE fused dispatch, later arrivals carry over as
+    stragglers.  ``min_models`` backstop handled by ``_trigger``."""
+    name: str = "asyncfleo"
+
+    def round_deadline(self, rt, rnd) -> Optional[float]:
+        if rnd.expected:                 # first arrival opens the window
+            return None
+        return min(rnd.t_start + rt.sim.agg_timeout_s, rt.sim.duration_s)
+
+    def on_arrival(self, rt, rnd, t: float) -> Optional[float]:
+        if rnd.trigger_scheduled is None:
+            return min(t + rt.sim.agg_timeout_s, rt.sim.duration_s)
+        return None
+
+    def split(self, rt, rnd, t_fired: float):
+        return rt.fls._trigger(rnd.expected, rnd.t_start)
+
+    def round_complete(self, rnd) -> bool:
+        return True
+
+
+@dataclasses.dataclass
+class SyncBarrierPolicy:
+    """Synchronous FedAvg barrier: aggregate when every expected model has
+    arrived, or at the straggler stall ``sync_stall_s`` — whichever comes
+    first (the GS-FedAvg baselines: fedisl / fedhap / Razmi-style
+    ground-station FL)."""
+    name: str = "sync"
+
+    def round_deadline(self, rt, rnd) -> Optional[float]:
+        if not rnd.expected:
+            return rnd.t_start               # nothing to wait for
+        return rnd.t_start + rt.sim.sync_stall_s
+
+    def on_arrival(self, rt, rnd, t: float) -> Optional[float]:
+        if rnd.arrived_count == len(rnd.expected):
+            return t                         # barrier complete: fire now
+        return None
+
+    def split(self, rt, rnd, t_fired: float):
+        return rt.fls._trigger(rnd.expected, rnd.t_start)
+
+    def round_complete(self, rnd) -> bool:
+        return True
+
+
+@dataclasses.dataclass
+class FedAsyncPolicy:
+    """FedAsync-style immediate aggregation: every MODEL_ARRIVAL triggers
+    its own (small) aggregation — the first one of a round consumes the
+    fused training dispatch (remaining rows carry over as pending
+    stragglers), later ones drain the carried matrix as they land.  The
+    round closes after its last expected arrival."""
+    name: str = "per_arrival"
+
+    def round_deadline(self, rt, rnd) -> Optional[float]:
+        if rnd.expected:
+            return None
+        return min(rnd.t_start + rt.sim.agg_timeout_s, rt.sim.duration_s)
+
+    def on_arrival(self, rt, rnd, t: float) -> Optional[float]:
+        return t
+
+    def split(self, rt, rnd, t_fired: float):
+        if not rnd.committed:
+            used = [a for a in rnd.expected if a[0] <= t_fired]
+            late = [a for a in rnd.expected if a[0] > t_fired]
+            return t_fired, used, late
+        return t_fired, [], []               # drain carried arrivals only
+
+    def round_complete(self, rnd) -> bool:
+        return rnd.arrived_count >= len(rnd.expected)
+
+
+POLICIES = {
+    "asyncfleo": AsyncFLEOPolicy,
+    "sync": SyncBarrierPolicy,
+    "per_arrival": FedAsyncPolicy,
+}
+
+
+def make_policy(spec, name: str = ""):
+    """Policy for a strategy spec: the explicit ``spec.sched_policy`` when
+    set, else derived — sync strategies get the barrier, ``per_arrival``
+    aggregation gets FedAsync, everything else the AsyncFLEO window."""
+    key = name or getattr(spec, "sched_policy", "")
+    if not key:
+        if spec.sync:
+            key = "sync"
+        elif spec.agg_mode == "per_arrival":
+            key = "per_arrival"
+        else:
+            key = "asyncfleo"
+    if key not in POLICIES:
+        raise KeyError(f"unknown scheduler policy {key!r}; "
+                       f"available: {sorted(POLICIES)}")
+    return POLICIES[key]()

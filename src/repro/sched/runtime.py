@@ -1,0 +1,245 @@
+"""Event-driven asynchronous FL runtime (DESIGN.md §7).
+
+`core/simulator.py`'s epoch loop advances simulated time one aggregation
+window at a time — enough to reproduce accuracy curves, but it hard-codes
+*when* the server aggregates.  The paper's headline claim (22x lower
+convergence delay than synchronous FL) is a statement about trigger
+policy, so this module runs the same physics and the same fused device
+program under a priority-queue event loop instead:
+
+    SINK_HANDOFF -> round opens: the contact plan + propagation model give
+      every satellite its global-model receive time; TRAIN_DONE events are
+      scheduled at receive + train_time.
+    TRAIN_DONE -> the satellite's local model enters the uplink relay; a
+      MODEL_ARRIVAL is scheduled at its sink arrival time.
+    MODEL_ARRIVAL / TRIGGER_TIMEOUT -> the strategy's trigger policy
+      (sched/policies.py) decides when to aggregate: AsyncFLEO's idle
+      window, the sync barrier, or FedAsync per-arrival.
+    trigger -> ALL arrivals ready at the instant batch into ONE fused
+      `core/epoch_step.py` dispatch (training + grouping distances +
+      aggregation contraction), so async semantics cost no extra device
+      round-trips; stragglers carry over device-resident exactly as in the
+      epoch loop.
+
+The runtime owns no model math: it drives `FLSimulation._fused_commit`
+(the epoch loop's post-trigger tail), so under the AsyncFLEO policy its
+aggregation instants, weights and dispatch counts are *identical* to the
+epoch loop — tests/test_sched.py pins that parity on a degenerate
+(always-visible) contact plan — while the sync-barrier and per-arrival
+policies express the baselines the epoch loop could only approximate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.sched.contacts import ContactPlan
+from repro.sched.events import Event, EventKind, EventQueue
+from repro.sched.policies import make_policy
+
+
+@dataclasses.dataclass
+class RoundState:
+    """Mutable per-round bookkeeping the event handlers share."""
+    idx: int
+    beta: int                       # global epoch counter at round start
+    t_start: float
+    source: int
+    sink: int
+    participants: List[int]
+    ids_np: np.ndarray              # padded participant ids (bank order)
+    expected: List[tuple]           # sorted finite (t_arr, sat, row)
+    arr_time: Dict[int, float]      # bank row -> sink arrival time
+    arrived_count: int = 0
+    trigger_scheduled: Optional[float] = None
+    committed: bool = False         # fused training dispatch consumed
+    closed: bool = False            # roles handed off; ignore stale events
+
+
+class EventDrivenRuntime:
+    """Priority-queue driver over an ``FLSimulation``'s compute machinery.
+
+    ``fls`` supplies physics (contact plan, propagation), strategy spec and
+    the fused-epoch commit path; ``policy`` defaults to the strategy's
+    (`sched/policies.make_policy`).  ``run`` returns the same
+    ``EpochRecord`` history as ``FLSimulation.run`` — one record per
+    aggregation — so downstream analysis (``convergence_time``) is shared.
+    """
+
+    def __init__(self, fls, policy=None, plan: Optional[ContactPlan] = None):
+        self.fls = fls
+        self.sim = fls.sim
+        self.spec = fls.spec
+        self.policy = policy or make_policy(fls.spec)
+        self.plan = plan or fls.plan
+        self.events = EventQueue()
+        self.rounds: Dict[int, RoundState] = {}
+        self.history: List = []
+        self.beta = 0
+        self._round_seq = 0
+        self._stop = False
+
+    # ---- lifecycle ---------------------------------------------------------
+
+    def run(self, w0, max_epochs: int = 30,
+            target_accuracy: Optional[float] = None):
+        fls = self.fls
+        self.bits, prog, _stacked = fls._init_run(w0)
+        if prog is None:
+            raise ValueError(
+                "the event-driven runtime reuses the fused epoch program as "
+                "its compute engine; the trainer must expose the fused-epoch "
+                "protocol (epoch_train_fn + epoch_inputs) and SimConfig must "
+                "keep use_model_bank/use_fused_step enabled")
+        self.prog = prog
+        self.max_epochs = max_epochs
+        self.target = target_accuracy
+        self.lazy_eval = (target_accuracy is None
+                          and hasattr(fls.evaluator, "eval_async"))
+        self.history = []
+        self.beta = 0
+        self._stop = False
+        self._start_round(0.0, source=0)
+        handlers = {
+            EventKind.TRAIN_DONE: self._on_train_done,
+            EventKind.MODEL_ARRIVAL: self._on_arrival,
+            EventKind.TRIGGER_TIMEOUT: self._on_trigger,
+            EventKind.SINK_HANDOFF: self._on_handoff,
+        }
+        while self.events and not self._stop:
+            ev = self.events.pop()
+            handlers[ev.kind](ev)
+        fls._resolve_pending_dists()       # leave grouping state complete
+        with fls._seg("eval"):
+            for rec in self.history:       # block once, at finalize time
+                rec.accuracy = float(rec.accuracy)
+        return self.history
+
+    # ---- round opening -----------------------------------------------------
+
+    def _start_round(self, t: float, source: int) -> None:
+        fls, sim = self.fls, self.sim
+        if t >= sim.duration_s or self.beta >= self.max_epochs:
+            return
+        sink = fls.topo.sink_of(source)
+        with fls._seg("timing"):
+            recv = fls._downlink(t, self.bits, source)
+        participants = [s for s in range(self.plan.num_sats)
+                        if np.isfinite(recv[s])]
+        ids_np = np.zeros(0, np.int32)
+        expected: List[tuple] = []
+        arr_time: Dict[int, float] = {}
+        t_done = np.zeros(0)
+        if participants:
+            with fls._seg("timing"):
+                # the SAME timing math as the epoch loop, by construction
+                ids_np, t_done, t_arr, expected = fls._arrival_times(
+                    participants, recv, self.bits, sink)
+            arr_time = {k: float(t_arr[k])
+                        for k in range(len(participants))}
+        if not expected and not fls._pend_meta:
+            return                          # constellation drained: halt
+        rnd = RoundState(self._round_seq, self.beta, t, source, sink,
+                         participants, ids_np, expected, arr_time)
+        self._round_seq += 1
+        self.rounds[rnd.idx] = rnd
+        for k, s in enumerate(participants):
+            self.events.push(Event(float(t_done[k]), EventKind.TRAIN_DONE,
+                                   rnd.idx, sat=s, row=k))
+        deadline = self.policy.round_deadline(self, rnd)
+        if deadline is not None:
+            rnd.trigger_scheduled = deadline
+            self.events.push(Event(deadline, EventKind.TRIGGER_TIMEOUT,
+                                   rnd.idx))
+
+    # ---- handlers ----------------------------------------------------------
+
+    def _on_train_done(self, ev: Event) -> None:
+        rnd = self.rounds[ev.round_idx]
+        ta = rnd.arr_time.get(ev.row)
+        if not rnd.closed and ta is not None and np.isfinite(ta):
+            self.events.push(Event(ta, EventKind.MODEL_ARRIVAL, rnd.idx,
+                                   sat=ev.sat, row=ev.row))
+
+    def _on_arrival(self, ev: Event) -> None:
+        rnd = self.rounds[ev.round_idx]
+        if rnd.closed:
+            return              # already carried over as a late straggler
+        rnd.arrived_count += 1
+        trig = self.policy.on_arrival(self, rnd, ev.time)
+        if trig is not None:
+            if rnd.trigger_scheduled is None or trig < rnd.trigger_scheduled:
+                rnd.trigger_scheduled = trig
+            self.events.push(Event(trig, EventKind.TRIGGER_TIMEOUT, rnd.idx))
+
+    def _on_trigger(self, ev: Event) -> None:
+        rnd = self.rounds[ev.round_idx]
+        if rnd.closed:
+            return              # duplicate deadline (barrier already fired)
+        t_agg, used, late = self.policy.split(self, rnd, ev.time)
+        pend = [ta for (ta, _s, _ep) in self.fls._pend_meta]
+        if not used and not any(ta <= t_agg for ta in pend):
+            if not rnd.committed and rnd.participants:
+                # sync stall with EVERY arrival late: commit the training
+                # dispatch anyway — all rows carry over as stragglers and
+                # a 0-model epoch is recorded, exactly as the epoch loop
+                # does for the same configuration
+                self._commit(rnd, t_agg, used, late)
+                return
+            t_next = min(pend) if pend else None
+            if (t_next is not None and not rnd.committed
+                    and not rnd.expected
+                    and t_next < self.sim.duration_s
+                    and t_next > ev.time):
+                # idle round: nothing trains and every carried straggler
+                # is still in flight — re-open the round at the earliest
+                # landing so the next trigger's window covers it (the
+                # epoch loop instead busy-waits timeout-sized epochs).
+                # Stragglers past the horizon are dropped, like the epoch
+                # loop's `t >= duration` break, so this always terminates.
+                rnd.t_start = t_next
+                self.events.push(Event(t_next, EventKind.TRIGGER_TIMEOUT,
+                                       rnd.idx))
+                return
+            self._maybe_close(rnd, ev.time)    # spurious: nothing to commit
+            return
+        self._commit(rnd, t_agg, used, late)
+
+    def _on_handoff(self, ev: Event) -> None:
+        # the round stays registered: stale TRAIN_DONE / MODEL_ARRIVAL
+        # events for it may still be queued and look their round up
+        rnd = self.rounds[ev.round_idx]
+        self._start_round(ev.time, source=rnd.sink)     # §IV-B3 role swap
+
+    # ---- commit ------------------------------------------------------------
+
+    def _commit(self, rnd: RoundState, t_agg: float, used, late) -> None:
+        fls, spec = self.fls, self.spec
+        participants = rnd.participants if not rnd.committed else []
+        ids_np = rnd.ids_np if not rnd.committed else np.zeros(0, np.int32)
+        out = fls._fused_commit(self.prog, self.beta, ids_np, participants,
+                                t_agg, used, late)
+        rnd.committed = True
+        t_agg, metas, info, _losses = out
+        if spec.agg_mode == "interval":
+            t_agg = max(t_agg, rnd.t_start + spec.interval_s)
+        w_tree = (fls._spec.unflatten(fls._w_flat)
+                  if fls.evaluator is not None else None)
+        acc = fls._record_epoch(self.history, self.beta, t_agg, metas, info,
+                                self.lazy_eval, w_tree)
+        self.beta += 1
+        if self.target is not None and acc >= self.target:
+            self._stop = True
+            return
+        if self.beta >= self.max_epochs:
+            self._stop = True
+            return
+        self._maybe_close(rnd, t_agg)
+
+    def _maybe_close(self, rnd: RoundState, t: float) -> None:
+        if not rnd.closed and rnd.committed and \
+                self.policy.round_complete(rnd):
+            rnd.closed = True
+            self.events.push(Event(t, EventKind.SINK_HANDOFF, rnd.idx))

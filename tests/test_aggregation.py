@@ -95,3 +95,20 @@ def test_strict_paper_eq14():
                                   strict_paper_eq14=True)
     # literal eq. 14: each selected model weighted by gamma (=1 here) -> sum=2
     np.testing.assert_allclose(w["w"], 2.0)
+
+
+def test_lmpool_size_mode_on_board_vs_trained():
+    """ISSUE: eq. 13/14 weights may use the full on-board shard (the
+    paper's D_n, default) or the truncated per-call count the batched vmap
+    actually trained on (DESIGN.md §3)."""
+    from repro.fl import LMPool
+    toks = np.zeros((10, 8), np.int32)
+    shards = [np.arange(0, 6), np.arange(6, 10)]     # sizes 6 and 4 -> m=4
+    pool = LMPool(model_cfg=None, tokens=toks, shards=shards)
+    assert pool.size_mode == "on_board"
+    assert pool.data_size(0) == 6 and pool.data_size(1) == 4
+    trained = LMPool(model_cfg=None, tokens=toks, shards=shards,
+                     size_mode="trained")
+    assert trained.data_size(0) == trained.data_size(1) == 4
+    with pytest.raises(ValueError, match="size_mode"):
+        LMPool(model_cfg=None, tokens=toks, shards=shards, size_mode="full")

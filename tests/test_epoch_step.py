@@ -169,6 +169,29 @@ def test_program_donates_and_matches_manual():
     np.testing.assert_allclose(np.asarray(dists_b)[:2], d_ref, rtol=1e-5)
 
 
+def test_fused_kernel_routing_parity():
+    """``use_agg_kernel`` routes the fused program's aggregation
+    contraction through the Pallas fed_agg kernel (interpret mode on CPU);
+    history and final weights must match the XLA contraction, and the
+    kernel-routed program must be cached separately."""
+    import dataclasses as dc
+    rows, finals = {}, {}
+    for flag in (False, True):
+        spec = dc.replace(get_strategy("asyncfleo-twohap"),
+                          use_agg_kernel=flag)
+        sim = SimConfig(duration_s=86400.0, train_time_s=300.0,
+                        use_model_bank=True, use_fused_step=True)
+        fls = FLSimulation(spec, TinyFusedTrainer(W0), None, sim)
+        hist = fls.run(W0, max_epochs=3)
+        rows[flag] = [(r.epoch, round(r.time_s, 6), r.num_models)
+                      for r in hist]
+        finals[flag] = np.asarray(fls._w_flat)
+        assert fls._fused_prog.use_kernel is flag
+        assert fls._fused_prog.dispatches == len(hist)
+    assert rows[False] == rows[True]
+    np.testing.assert_allclose(finals[False], finals[True], atol=1e-5)
+
+
 def test_program_cached_on_trainer():
     trainer = TinyFusedTrainer(W0)
     p1 = make_epoch_program(trainer, W0)
@@ -223,7 +246,6 @@ def test_fallback_parity_new_orbit_with_stale():
         # sat 8 belongs to orbit 1, which the grouping has never seen; its
         # model arrives immediately but was trained "before epoch 0"
         fls._pend_meta = [(1.0, 8, -1)]
-        fls._pend_np = straggler.astype(np.float32)
         fls._pend_dev = jnp.asarray(straggler.astype(np.float32))
         _staged_downlink(fls, [range(0, 8)])   # only orbit 0 trains
         hist = fls.run(W0, max_epochs=2)
@@ -252,7 +274,6 @@ def test_pending_without_training_regression(mode):
     spec = FlatSpec.of(W0)
     row = np.asarray(spec.flatten(W0))[None, :] + 1.0
     fls._pend_meta = [(10.0, 3, 0)]
-    fls._pend_np = row.astype(np.float32)
     fls._pend_dev = jnp.asarray(row.astype(np.float32))
     _staged_downlink(fls, [()])              # nobody is ever visible
     hist = fls.run(W0, max_epochs=2)

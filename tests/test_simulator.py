@@ -67,6 +67,23 @@ def test_convergence_time_helper():
     assert convergence_time(hist, 0.95) is None
 
 
+def test_convergence_time_edge_cases():
+    assert convergence_time([], 0.5) is None          # empty history
+    hist = [EpochRecord(0, 50.0, float("nan"), 1, 1.0, 0),
+            EpochRecord(1, 100.0, 0.9, 1, 1.0, 0),
+            EpochRecord(2, 150.0, 0.95, 1, 1.0, 0)]
+    # NaN accuracy rows never satisfy the target (NaN >= x is False)
+    assert convergence_time(hist, 0.8) == 100.0
+    # exactly-at-target counts (>=), and the FIRST crossing wins
+    assert convergence_time(hist, 0.9) == 100.0
+    # target met by the very first record
+    assert convergence_time(hist[2:], 0.9) == 150.0
+    # non-monotone accuracy: first crossing still wins
+    dip = [EpochRecord(0, 10.0, 0.9, 1, 1.0, 0),
+           EpochRecord(1, 20.0, 0.4, 1, 1.0, 0)]
+    assert convergence_time(dip, 0.85) == 10.0
+
+
 def test_target_accuracy_stops_early():
     sim = FLSimulation(get_strategy("asyncfleo-hap"), StubTrainer(),
                        evaluator, SIMCFG)

@@ -52,6 +52,40 @@ def test_visibility_fraction_reasonable():
     assert 0.005 < fr < 0.5
 
 
+def test_next_visible_after_never_visible():
+    """Equatorial constellation + polar GS: no satellite is EVER visible —
+    next_visible_after must report (inf, -1), not crash or wrap."""
+    c = WalkerDelta(num_orbits=1, sats_per_orbit=4, inclination_deg=0.0)
+    tl = VisibilityTimeline(c, [GroundNode("GS-NP", 90.0, 0.0, 0.0)],
+                            3600.0, 10.0)
+    assert not tl.grid.any()
+    tv, ps = tl.next_visible_after([0, 1, 2, 3], 0.0)
+    assert not np.isfinite(tv).any()
+    assert (ps == -1).all()
+    assert tl.next_visible_time(0, 0.0) is None
+
+
+def test_next_visible_after_past_horizon():
+    """Queries beyond the precomputed horizon clamp to the final grid row:
+    visible-at-the-end satellites report the last sample time, everyone
+    else (inf, -1)."""
+    c = paper_constellation()
+    tl = VisibilityTimeline(c, make_ps_nodes("twohap"), 6 * 3600.0, 30.0)
+    tv, ps = tl.next_visible_after(np.arange(c.num_sats),
+                                   tl.duration_s * 10.0)
+    last = tl.grid[-1]
+    for s in range(c.num_sats):
+        if last[s].any():
+            assert tv[s] == tl.times[-1]
+            assert ps[s] == int(np.argmax(last[s]))
+        else:
+            assert not np.isfinite(tv[s])
+            assert ps[s] == -1
+    # scalar query form agrees
+    t_clamped = tl.next_visible_time(0, tl.duration_s * 10.0)
+    assert t_clamped is None or t_clamped == tl.times[-1]
+
+
 def test_hap_sees_similar_or_more_than_gs():
     """The paper's rationale: HAP at 20 km has slightly better visibility.
     At a fixed 10-degree minimum elevation the geometric gain is tiny, so we
