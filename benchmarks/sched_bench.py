@@ -10,13 +10,25 @@ delay to a target accuracy is read off the shared history format with
 ``convergence_time``.
 
 Per policy it records: simulated convergence delay (seconds), epochs to
-target, fused dispatch counts, event counts, and host wall time; plus the
-compiled contact-plan summary for the scenario.  Results go to
-``BENCH_sched.json`` (CI uploads it next to ``BENCH_epoch.json``).
+target, fused dispatch counts, event counts, pipeline telemetry
+(rounds opened / peak rounds in flight / cross-round straggler
+adoptions), and host wall time; plus the compiled contact-plan summary
+for the scenario.  The ``async_pipelined`` row runs the SAME AsyncFLEO
+policy with up to 3 overlapping rounds in flight (DESIGN.md §8), so the
+pipelined-vs-single-round delta is pure scheduling.  Results go to
+``BENCH_sched.json`` (CI uploads it next to ``BENCH_epoch.json``; the
+field-by-field schema is documented in ``benchmarks/README.md``).
 
 ``--fail-if-not-lower`` exits nonzero unless the AsyncFLEO policy's
 convergence delay is strictly lower than the sync GS-FedAvg baseline's —
-the acceptance gate for the paper's ordering.
+the acceptance gate for the paper's ordering — and the pipelined row's
+is no higher than single-round async.
+
+``--cnn-sats 200`` appends the accuracy-aware convergence-delay study:
+the async / pipelined / sync head-to-head re-run with REAL federated CNN
+training (non-IID class-conditional shards) at S >= 200, where the
+measured delay includes genuine accuracy dynamics instead of the
+deterministic proxy.
 
 Usage:  PYTHONPATH=src python benchmarks/sched_bench.py [--target 0.9]
 """
@@ -37,9 +49,12 @@ from repro.sched import EventDrivenRuntime
 
 # async vs sync on the same constellation with the SAME PS placement
 # (a single ground station, the Razmi-style GS-FL setup), plus the
-# FedAsync per-arrival baseline for reference
+# FedAsync per-arrival baseline for reference and the pipelined runtime
+# (up to 3 overlapping rounds in flight, DESIGN.md §8) head-to-head
+# against single-round async
 POLICY_ROWS = (
     ("async_asyncfleo", "asyncfleo-gs"),
+    ("async_pipelined", "asyncfleo-pipelined"),
     ("sync_gs_fedavg", "fedisl"),
     ("fedasync_per_arrival", "fedasync"),
 )
@@ -126,9 +141,83 @@ def bench_policy(name: str, strategy: str, w0, target: float,
         "fused_dispatches": fls._fused_prog.dispatches,
         "fallback_dispatches": fls._fused_prog.fallback_dispatches,
         "event_counts": dict(rt.events.counts),
+        "sched_stats": dict(rt.stats),
+        "max_in_flight": rt.max_in_flight,
+        "handoff_policy": rt.handoff.name,
         "wall_s": wall,
         "plan": fls.plan.summary(),
     }
+
+
+def cnn_study(num_sats: int, target: float, max_epochs: int,
+              duration_s: float) -> Dict:
+    """Accuracy-aware convergence-delay study with the REAL CNN pools at
+    S >= 200: the deterministic-trainer rows above isolate pure
+    scheduling delay, this one re-runs the async / pipelined / sync
+    head-to-head with actual federated CNN training on class-conditional
+    image shards, so the measured delay includes genuine accuracy
+    dynamics (staleness-discounted stale rounds really do contribute
+    less).  Opt-in via ``--cnn-sats`` (minutes of wall time, not CI)."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import MNIST_CNN
+    from repro.core.constellation import WalkerDelta
+    from repro.data import class_conditional_images, paper_noniid_partition
+    from repro.fl import Evaluator, ImageClassifierPool
+    from repro.models import cnn
+
+    assert num_sats % 8 == 0, "num_sats must be a multiple of 8 (orbits)"
+    const = WalkerDelta(num_orbits=num_sats // 8, sats_per_orbit=8,
+                        altitude_m=2000e3, inclination_deg=80.0)
+    cfg = dataclasses.replace(MNIST_CNN, conv_channels=(4, 8), hidden=32)
+    imgs, labs = class_conditional_images(0, 3000, separation=1.2)
+    ti, tl = class_conditional_images(99, 500, separation=1.2)
+    shards = paper_noniid_partition(labs, const.orbit_ids(), 0)
+    pool = ImageClassifierPool(cfg, imgs, labs, shards, local_iters=20,
+                               lr=0.05)
+    ev = Evaluator(cfg, ti, tl)
+    w0 = jax.device_get(cnn.init_params(jax.random.PRNGKey(0), cfg))
+
+    out = {"num_sats": num_sats, "target_accuracy": target, "rows": []}
+    for name, strategy in (("async_asyncfleo", "asyncfleo-gs"),
+                           ("async_pipelined", "asyncfleo-pipelined"),
+                           ("sync_gs_fedavg", "fedisl")):
+        sim = SimConfig(duration_s=duration_s, dt_s=30.0, train_time_s=300.0,
+                        use_model_bank=True, use_fused_step=True,
+                        event_driven=True)
+        fls = FLSimulation(get_strategy(strategy), pool, ev, sim,
+                           constellation=const)
+        rt = EventDrivenRuntime(fls)
+        # staleness-discounted pipelined rounds contribute smaller steps,
+        # so the pipeline gets a proportionally larger epoch budget (it
+        # fits them in less simulated time — that trade is the point)
+        budget = max_epochs * (2 if strategy == "asyncfleo-pipelined"
+                               else 1)
+        t0 = time.perf_counter()
+        hist = rt.run(w0, max_epochs=budget, target_accuracy=target)
+        wall = time.perf_counter() - t0
+        conv = convergence_time(hist, target)
+        row = {
+            "policy": name,
+            "strategy": strategy,
+            "convergence_delay_s": conv,
+            "epochs_to_target": (len(hist) if conv is not None else None),
+            "final_accuracy": float(hist[-1].accuracy) if hist else None,
+            "aggregations": len(hist),
+            "sched_stats": dict(rt.stats),
+            "wall_s": wall,
+        }
+        out["rows"].append(row)
+        conv_h = conv / 3600.0 if conv is not None else float("nan")
+        acc = (row["final_accuracy"] if row["final_accuracy"] is not None
+               else float("nan"))
+        print(f"[cnn S={num_sats}] {name:18s}: "
+              f"conv_delay {conv_h:8.2f} h"
+              f"  aggs {len(hist)}  final_acc {acc:.3f}"
+              f"  wall {wall:.1f} s")
+    return out
 
 
 def main():
@@ -139,7 +228,16 @@ def main():
     ap.add_argument("--out", default="BENCH_sched.json")
     ap.add_argument("--fail-if-not-lower", action="store_true",
                     help="exit 1 unless AsyncFLEO's convergence delay is "
-                         "strictly lower than the sync GS-FedAvg baseline")
+                         "strictly lower than the sync GS-FedAvg baseline "
+                         "AND the pipelined runtime's is no higher than "
+                         "single-round async")
+    ap.add_argument("--cnn-sats", type=int, default=0,
+                    help="also run the accuracy-aware CNN study at this "
+                         "constellation size (>= 200 for the ROADMAP item; "
+                         "0 = skip)")
+    ap.add_argument("--cnn-target", type=float, default=0.55,
+                    help="target test accuracy for the CNN study")
+    ap.add_argument("--cnn-max-epochs", type=int, default=10)
     args = ap.parse_args()
 
     w0 = make_model()
@@ -160,11 +258,21 @@ def main():
 
     by_name = {r["policy"]: r for r in report["policies"]}
     a = by_name["async_asyncfleo"]["convergence_delay_s"]
+    p = by_name["async_pipelined"]["convergence_delay_s"]
     s = by_name["sync_gs_fedavg"]["convergence_delay_s"]
     report["async_vs_sync_speedup"] = (s / a if a and s else None)
+    report["pipelined_vs_async_speedup"] = (a / p if a and p else None)
     if report["async_vs_sync_speedup"]:
         print(f"async/sync convergence-delay speedup: "
               f"{report['async_vs_sync_speedup']:.1f}x")
+    if report["pipelined_vs_async_speedup"]:
+        print(f"pipelined/single-round async speedup: "
+              f"{report['pipelined_vs_async_speedup']:.2f}x")
+
+    if args.cnn_sats:
+        report["cnn_study"] = cnn_study(args.cnn_sats, args.cnn_target,
+                                        args.cnn_max_epochs,
+                                        args.days * 86400.0)
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
@@ -175,6 +283,10 @@ def main():
             raise SystemExit(
                 f"async convergence delay ({a}) not strictly lower than "
                 f"sync ({s})")
+        if p is None or not p <= a:
+            raise SystemExit(
+                f"pipelined convergence delay ({p}) worse than "
+                f"single-round async ({a})")
 
 
 if __name__ == "__main__":

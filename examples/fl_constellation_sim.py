@@ -14,6 +14,14 @@ compiled plan's window statistics are printed alongside the curves:
 
     PYTHONPATH=src python examples/fl_constellation_sim.py \
         --schemes asyncfleo-hap fedasync fedisl --event-driven
+
+``--max-in-flight N`` (N > 1) additionally pipelines every scheme's
+rounds — up to N overlapping rounds in flight per the DESIGN.md §8
+round model (the ``asyncfleo-pipelined`` scheme ships with depth 3 and
+the contact-plan handoff built in):
+
+    PYTHONPATH=src python examples/fl_constellation_sim.py \
+        --schemes asyncfleo-pipelined asyncfleo-gs --event-driven
 """
 import argparse
 import dataclasses
@@ -44,7 +52,14 @@ def main():
                     help="drive each scheme with the async event scheduler "
                          "(contact plan + trigger policies) instead of the "
                          "epoch loop")
+    ap.add_argument("--max-in-flight", type=int, default=0,
+                    help="override every scheme's pipeline depth (rounds "
+                         "in flight, DESIGN.md §8); 0 keeps each "
+                         "strategy's own setting, >1 implies "
+                         "--event-driven")
     args = ap.parse_args()
+    if args.max_in_flight > 1:
+        args.event_driven = True
 
     cfg = dataclasses.replace(MNIST_CNN, conv_channels=(8, 16))
     const = paper_constellation()
@@ -59,7 +74,11 @@ def main():
     print("scheme,epoch,sim_time_h,accuracy,num_models,gamma")
     summary = []
     for name in args.schemes:
-        sim = FLSimulation(get_strategy(name), pool, ev,
+        spec = get_strategy(name)
+        if args.max_in_flight:
+            spec = dataclasses.replace(spec,
+                                       max_in_flight=args.max_in_flight)
+        sim = FLSimulation(spec, pool, ev,
                            SimConfig(duration_s=args.days * 86400.0,
                                      event_driven=args.event_driven))
         if args.event_driven:

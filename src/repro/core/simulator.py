@@ -284,22 +284,37 @@ class FLSimulation:
                                   used, late)
 
     def _fused_commit(self, prog, beta, ids_np, participants, t_agg, used,
-                      late):
+                      late, train_epoch: Optional[int] = None):
         """Post-trigger tail of a fused epoch: metas/carry bookkeeping,
         grouping metadata, weight vectors, the ONE donated dispatch, and
         the straggler carry-over.  ``used``/``late`` are (t_arr, sat, bank
         row) triples split at ``t_agg`` — by `_trigger` on the epoch loop,
-        by a trigger policy in the event runtime (`sched/runtime.py`)."""
+        by a trigger policy in the event runtime (`sched/runtime.py`).
+
+        ``train_epoch`` names the round the commit belongs to: the global
+        epoch counter when the round's downlink left the source (defaults
+        to ``beta``, the epoch-loop case where rounds never overlap).
+        With the pipelined runtime (DESIGN.md §8) a round may commit
+        after later-opened rounds advanced ``beta``; its models — used
+        AND late-carried — are stamped with ``train_epoch``, so eq. 13's
+        staleness discount and Alg. 2's fresh/stale selection see the
+        model version the round actually started from."""
         from repro.core.epoch_step import carry_capacity, next_pow2
 
         sim, spec = self.sim, self.spec
+        if train_epoch is None:
+            train_epoch = beta
+        # the RNG seed stays keyed on the commit-time counter: commits are
+        # serialized so beta is unique per training dispatch, while two
+        # overlapping pipelined rounds can share a train_epoch (and must
+        # NOT draw identical minibatch streams)
         seed = sim.seed * 1000 + beta
         self._spec = prog.spec
         N = prog.spec.num_params
         c_idx, k_idx = self._carried_split(t_agg)
 
         metas = [SatelliteMeta(s, self.trainer.data_size(s),
-                               loc=(0.0, 0.0), ts=ta, epoch=beta)
+                               loc=(0.0, 0.0), ts=ta, epoch=train_epoch)
                  for (ta, s, _k) in used]
         metas += [SatelliteMeta(s, self.trainer.data_size(s),
                                 loc=(0.0, 0.0), ts=ta, epoch=ep)
@@ -439,7 +454,7 @@ class FLSimulation:
                 late_dev = gather_rows(stack, late_ids)
                 kept_dev = (late_dev if kept_dev is None
                             else jnp.concatenate([kept_dev, late_dev]))
-                kept_meta += [(ta, s, beta) for (ta, s, _k) in late]
+                kept_meta += [(ta, s, train_epoch) for (ta, s, _k) in late]
             self._pend_dev, self._pend_meta = kept_dev, kept_meta
 
         self._w_flat = new_w

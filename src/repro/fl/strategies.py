@@ -14,6 +14,7 @@ fedsat             no     no      no         per-arrival  GS at the North Pole
 fedspace           no     no      no         interval     GS, arbitrary
 fedhap             yes    yes     no         fedavg       1 HAP
 fedasync           no     yes     no         per-arrival  GS, arbitrary
+asyncfleo-pipelined no    yes     yes        asyncfleo    GS, 3 rounds in flight
 =================  ====== ======= ========== ============ =====================
 
 FedSpace's real scheduler optimizes the schedule from uploaded raw-data
@@ -41,6 +42,17 @@ class StrategySpec:
     # sync/agg_mode — sync -> barrier, per_arrival -> FedAsync, else the
     # AsyncFLEO idle-timeout window
     sched_policy: str = ""
+    # pipelined event runtime (sched/runtime.py, DESIGN.md §8): how many
+    # rounds may be in flight at once (1 = the single-round loop,
+    # bit-identical to the epoch loop) and which sink-handoff policy
+    # picks the next source/sink PS ("" -> the §IV-B3 ring role swap;
+    # "next_contact" -> earliest-next-contact from the contact plan)
+    max_in_flight: int = 1
+    handoff_policy: str = ""
+    # per-divergence-group trigger deadlines for the AsyncFLEO policy:
+    # ((group_id, window_s), ...) pairs (group -1 = not-yet-grouped
+    # orbits); empty keeps the single global agg_timeout_s window
+    group_timeouts: tuple = ()
 
 
 STRATEGIES = {
@@ -64,6 +76,14 @@ STRATEGIES = {
     # aggregation instead of a batched window
     "fedasync": StrategySpec("fedasync", False, True, False,
                              "per_arrival", "gs", sched_policy="per_arrival"),
+    # pipelined AsyncFLEO (DESIGN.md §8): same physics and PS placement
+    # as asyncfleo-gs, but the event runtime keeps up to 3 rounds in
+    # flight and opens each from the contact-plan-chosen PS — the
+    # head-to-head row that isolates what overlap buys
+    "asyncfleo-pipelined": StrategySpec("asyncfleo-pipelined", False, True,
+                                        True, "asyncfleo", "gs",
+                                        max_in_flight=3,
+                                        handoff_policy="next_contact"),
 }
 
 

@@ -1,13 +1,19 @@
-# Event-driven async FL scheduling: contact plans compiled from orbital
-# geometry, a priority-queue runtime reusing the fused epoch program, and
-# pluggable trigger policies (AsyncFLEO / sync barrier / FedAsync).
+# Event-driven async FL scheduling (DESIGN.md §7-§8): contact plans
+# compiled from orbital geometry, a priority-queue runtime that pipelines
+# up to StrategySpec.max_in_flight overlapping rounds over the fused
+# epoch program, pluggable trigger policies (AsyncFLEO / sync barrier /
+# FedAsync, with optional per-divergence-group deadlines) and sink
+# handoff policies (ring role swap / contact-plan next-contact).
 from repro.sched.contacts import ContactPlan, ContactWindow
 from repro.sched.events import Event, EventKind, EventQueue
-from repro.sched.policies import (AsyncFLEOPolicy, FedAsyncPolicy, POLICIES,
-                                  SyncBarrierPolicy, make_policy)
+from repro.sched.policies import (AsyncFLEOPolicy, FedAsyncPolicy,
+                                  HANDOFF_POLICIES, NextContactHandoff,
+                                  POLICIES, RingHandoff, SyncBarrierPolicy,
+                                  make_handoff_policy, make_policy)
 from repro.sched.runtime import EventDrivenRuntime, RoundState
 
 __all__ = ["ContactPlan", "ContactWindow", "Event", "EventKind",
            "EventQueue", "AsyncFLEOPolicy", "SyncBarrierPolicy",
            "FedAsyncPolicy", "POLICIES", "make_policy",
-           "EventDrivenRuntime", "RoundState"]
+           "RingHandoff", "NextContactHandoff", "HANDOFF_POLICIES",
+           "make_handoff_policy", "EventDrivenRuntime", "RoundState"]

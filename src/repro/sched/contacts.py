@@ -1,4 +1,5 @@
-"""Contact-plan compilation: orbital geometry -> schedulable link windows.
+"""Contact-plan compilation: orbital geometry -> schedulable link windows
+(DESIGN.md §7; the multi-sink handoff query it serves is §8).
 
 A *contact plan* is the standard artifact of DTN / satellite-network
 scheduling (LRSIM's dynamic-state generation follows the same shape): the
@@ -74,6 +75,8 @@ class ContactPlan:
 
     _windows: Optional[List[ContactWindow]] = dataclasses.field(
         default=None, repr=False)
+    _node_vis: Optional[List[np.ndarray]] = dataclasses.field(
+        default=None, repr=False)      # per-PS sorted any-sat-visible times
 
     # ---- construction ------------------------------------------------------
 
@@ -151,6 +154,24 @@ class ContactPlan:
         """Vectorized earliest contact at/after ``t``: (times, ps ids),
         inf / -1 for satellites never visible again within the horizon."""
         return self.timeline.next_visible_after(sats, t)
+
+    def next_contact_by_node(self, t: float) -> np.ndarray:
+        """Per-PS earliest instant >= ``t`` at which ANY satellite is in
+        view — ``(P,)`` with inf where a node sees nothing for the rest
+        of the horizon.  This is the multi-sink handoff signal
+        (DESIGN.md §8): `sched/policies.NextContactHandoff` opens the
+        next round at the HAP that can start talking soonest.  The
+        per-node visible-step index is built once and cached."""
+        if self._node_vis is None:
+            any_sat = self.timeline.grid.any(axis=1)         # (T, P)
+            self._node_vis = [self.timeline.times[any_sat[:, p]]
+                              for p in range(any_sat.shape[1])]
+        out = np.full(len(self._node_vis), np.inf)
+        for p, times in enumerate(self._node_vis):
+            i = int(np.searchsorted(times, t, side="left"))
+            if i < len(times):
+                out[p] = times[i]
+        return out
 
     def next_any_contact(self, t: float) -> Optional[float]:
         """Earliest time >= t when ANY satellite sees a PS (None if the

@@ -1,4 +1,4 @@
-"""Discrete-event primitives for the async FL runtime (DESIGN.md §7).
+"""Discrete-event primitives for the async FL runtime (DESIGN.md §7-§8).
 
 Four event kinds drive a federated round (FLGo's ``system_simulator``
 separates virtual-clock state the same way):
@@ -7,9 +7,18 @@ separates virtual-clock state the same way):
 * ``MODEL_ARRIVAL``  — a local model reached the sink PS (after the
   uplink relay chain);
 * ``TRIGGER_TIMEOUT``— a policy-scheduled aggregation deadline fired
-  (AsyncFLEO's idle timeout, the sync barrier's straggler stall);
-* ``SINK_HANDOFF``   — a round committed and PS roles swap (§IV-B3);
-  its handler opens the next round.
+  (AsyncFLEO's idle timeout, the sync barrier's straggler stall, a
+  per-divergence-group deadline — DESIGN.md §8);
+* ``SINK_HANDOFF``   — open the next round.  Pushed when a round closes
+  (PS roles swap, §IV-B3) and, in pipelined mode, *speculatively* while
+  a round is still in flight (``pipelined=True``) so up to
+  ``max_in_flight`` rounds overlap (DESIGN.md §8).
+
+Every event carries the ``round_idx`` it is addressed to, so with
+several rounds in flight a ``MODEL_ARRIVAL`` always commits into the
+round that scheduled it; arrivals addressed to an already-closed round
+are ignored here and reach the successor round through the simulator's
+carried-straggler set instead (§8 late-arrival semantics).
 
 ``EventQueue`` is a plain binary heap keyed on (time, sequence) — the
 sequence number makes same-instant pops deterministic (FIFO), which the
@@ -35,12 +44,16 @@ class EventKind(enum.IntEnum):
 class Event:
     """One scheduled occurrence.  ``sat`` / ``row`` are payload for the
     training/arrival kinds (``row`` is the satellite's row in the round's
-    padded training bank); -1 where not applicable."""
+    padded training bank); -1 where not applicable.  ``pipelined`` marks
+    a speculative ``SINK_HANDOFF`` that tries to extend the pipeline
+    while its round is still in flight — the handler drops it when the
+    pipeline is already at ``max_in_flight`` (DESIGN.md §8)."""
     time: float
     kind: EventKind
     round_idx: int
     sat: int = -1
     row: int = -1
+    pipelined: bool = False
 
     def __post_init__(self):
         assert self.time == self.time, "event time must not be NaN"

@@ -1,17 +1,20 @@
-"""Pluggable aggregation-trigger policies for the event runtime.
+"""Pluggable trigger + handoff policies for the event runtime
+(DESIGN.md §7; the per-group deadlines and the handoff contract are §8).
 
-A policy decides WHEN the sink PS aggregates; WHAT the update computes
-(eqs. 4/13/14, the per-arrival EMA, the interval emulation) stays with the
-strategy's ``agg_mode`` (`core/aggregation.epoch_weight_vector`), so a
-policy is pure scheduling logic over a round's expected/observed arrivals:
+A *trigger* policy decides WHEN the sink PS aggregates; WHAT the update
+computes (eqs. 4/13/14, the per-arrival EMA, the interval emulation) stays
+with the strategy's ``agg_mode`` (`core/aggregation.epoch_weight_vector`),
+so a policy is pure scheduling logic over a round's expected/observed
+arrivals:
 
 * ``round_deadline``  — absolute TRIGGER_TIMEOUT to schedule when a round
   opens (the sync barrier's straggler stall; the idle timeout of a round
   that only drains carried stragglers), or None;
 * ``on_arrival``      — absolute trigger time a MODEL_ARRIVAL should
-  schedule (AsyncFLEO schedules first-arrival + idle timeout; the sync
-  barrier fires when the last expected model lands; FedAsync fires on
-  every arrival), or None;
+  schedule (AsyncFLEO schedules first-arrival + idle timeout — or, with
+  ``group_timeouts`` set, one deadline per divergence group of the
+  arriving satellite, DESIGN.md §8; the sync barrier fires when the last
+  expected model lands; FedAsync fires on every arrival), or None;
 * ``split``           — at trigger time, the (t_agg, used, late) partition
   of the round's arrivals.  AsyncFLEO and the sync barrier delegate to
   ``FLSimulation._trigger`` so the event runtime reproduces the epoch
@@ -19,16 +22,38 @@ policy is pure scheduling logic over a round's expected/observed arrivals:
   tests/test_sched.py);
 * ``round_complete``  — whether a commit closes the round (PS roles swap).
 
-Policies are selected from the strategy table (`fl/strategies.py`,
-``StrategySpec.sched_policy``): AsyncFLEO strategies map to the
-idle-timeout policy, synchronous FedAvg baselines (ground-station FL as in
-Razmi et al.) to the barrier, and the FedAsync-style ``fedasync`` /
-``fedsat`` strategies to per-arrival aggregation.
+A *handoff* policy decides WHERE the next round runs when a SINK_HANDOFF
+fires (DESIGN.md §8 handoff contract):
+
+* ``next_round(rt, rnd, t) -> (source, sink)`` — the PS that broadcasts
+  the next global model and the PS that collects its arrivals.
+  ``RingHandoff`` reproduces the paper's §IV-B3 role swap (the previous
+  sink becomes the source, the farthest ring HAP the sink) and is the
+  ``max_in_flight=1`` parity default; ``NextContactHandoff`` consults the
+  compiled ``ContactPlan`` (``next_contact_by_node``) and picks the PS
+  with the earliest upcoming satellite contact as source (and, with >1
+  PS, the next-earliest as sink) — the contact-plan-driven downlink
+  scheduling of arXiv:2302.13447.
+* ``next_open_time(rt, rnd) -> float | None`` — when a *pipelined*
+  successor round may open while ``rnd`` is still in flight (None =
+  never).  The default is the round's first expected arrival: by then
+  the fastest satellites are done training and the constellation can
+  absorb the next downlink while the current collection window runs.
+
+Policies are selected from the strategy table (`fl/strategies.py`):
+``StrategySpec.sched_policy`` names the trigger policy (sync strategies
+default to the barrier, ``per_arrival`` aggregation to FedAsync,
+everything else to the AsyncFLEO window), ``StrategySpec.handoff_policy``
+names the handoff policy ("" -> ring swap), and
+``StrategySpec.group_timeouts`` feeds the AsyncFLEO policy's per-group
+deadlines.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
+
+import numpy as np
 
 Arrival = Tuple[float, int, int]                 # (t_arrival, sat, bank row)
 
@@ -38,21 +63,53 @@ class AsyncFLEOPolicy:
     """AsyncFLEO (Alg. 2 trigger): the first arrival of a round opens a
     collection window of ``agg_timeout_s``; everything that lands inside
     aggregates in ONE fused dispatch, later arrivals carry over as
-    stragglers.  ``min_models`` backstop handled by ``_trigger``."""
+    stragglers.  ``min_models`` backstop handled by ``_trigger``.
+
+    ``group_timeouts`` (group id -> window seconds; -1 = not-yet-grouped
+    orbits) turns the single window into per-divergence-group deadlines
+    (DESIGN.md §8): the first arrival FROM EACH GROUP opens that group's
+    window and the round commits at the earliest group deadline.  Empty
+    (the default) keeps the single global window — bit-identical to the
+    epoch loop, which the parity tests pin."""
     name: str = "asyncfleo"
+    group_timeouts: Dict[int, float] = dataclasses.field(
+        default_factory=dict)
+
+    def window_s(self, rt, group: int) -> float:
+        return float(self.group_timeouts.get(group, rt.sim.agg_timeout_s))
 
     def round_deadline(self, rt, rnd) -> Optional[float]:
         if rnd.expected:                 # first arrival opens the window
             return None
         return min(rnd.t_start + rt.sim.agg_timeout_s, rt.sim.duration_s)
 
-    def on_arrival(self, rt, rnd, t: float) -> Optional[float]:
-        if rnd.trigger_scheduled is None:
-            return min(t + rt.sim.agg_timeout_s, rt.sim.duration_s)
-        return None
+    def on_arrival(self, rt, rnd, t: float, sat: int = -1
+                   ) -> Optional[float]:
+        if not self.group_timeouts:
+            if rnd.trigger_scheduled is None:
+                return min(t + rt.sim.agg_timeout_s, rt.sim.duration_s)
+            return None
+        g = rt.group_of_sat(sat)
+        if g in rnd.group_first:         # group window already open
+            return None
+        rnd.group_first[g] = t
+        return min(t + self.window_s(rt, g), rt.sim.duration_s)
 
     def split(self, rt, rnd, t_fired: float):
-        return rt.fls._trigger(rnd.expected, rnd.t_start)
+        if not self.group_timeouts:
+            # delegate to the epoch loop's trigger: identical aggregation
+            # instants (the parity contract)
+            return rt.fls._trigger(rnd.expected, rnd.t_start)
+        # per-group mode: the earliest group deadline IS the aggregation
+        # instant; min_models backstop as in `_trigger`'s async branch
+        arrivals = rnd.expected
+        t_agg = min(t_fired, rt.sim.duration_s)
+        used = [a for a in arrivals if a[0] <= t_agg]
+        if len(used) < rt.sim.min_models:
+            used = arrivals[: rt.sim.min_models]
+            t_agg = used[-1][0] if used else t_agg
+        late = [a for a in arrivals if a[0] > t_agg]
+        return t_agg, used, late
 
     def round_complete(self, rnd) -> bool:
         return True
@@ -71,7 +128,8 @@ class SyncBarrierPolicy:
             return rnd.t_start               # nothing to wait for
         return rnd.t_start + rt.sim.sync_stall_s
 
-    def on_arrival(self, rt, rnd, t: float) -> Optional[float]:
+    def on_arrival(self, rt, rnd, t: float, sat: int = -1
+                   ) -> Optional[float]:
         if rnd.arrived_count == len(rnd.expected):
             return t                         # barrier complete: fire now
         return None
@@ -97,7 +155,8 @@ class FedAsyncPolicy:
             return None
         return min(rnd.t_start + rt.sim.agg_timeout_s, rt.sim.duration_s)
 
-    def on_arrival(self, rt, rnd, t: float) -> Optional[float]:
+    def on_arrival(self, rt, rnd, t: float, sat: int = -1
+                   ) -> Optional[float]:
         return t
 
     def split(self, rt, rnd, t_fired: float):
@@ -121,7 +180,9 @@ POLICIES = {
 def make_policy(spec, name: str = ""):
     """Policy for a strategy spec: the explicit ``spec.sched_policy`` when
     set, else derived — sync strategies get the barrier, ``per_arrival``
-    aggregation gets FedAsync, everything else the AsyncFLEO window."""
+    aggregation gets FedAsync, everything else the AsyncFLEO window.
+    ``spec.group_timeouts`` pairs feed the AsyncFLEO policy's per-group
+    deadlines (DESIGN.md §8)."""
     key = name or getattr(spec, "sched_policy", "")
     if not key:
         if spec.sync:
@@ -133,4 +194,70 @@ def make_policy(spec, name: str = ""):
     if key not in POLICIES:
         raise KeyError(f"unknown scheduler policy {key!r}; "
                        f"available: {sorted(POLICIES)}")
-    return POLICIES[key]()
+    policy = POLICIES[key]()
+    gt = dict(getattr(spec, "group_timeouts", ()) or ())
+    if gt and isinstance(policy, AsyncFLEOPolicy):
+        policy.group_timeouts = gt
+    return policy
+
+
+# ---- sink handoff (where the next round runs, DESIGN.md §8) ----------------
+
+
+@dataclasses.dataclass
+class RingHandoff:
+    """The paper's §IV-B3 role swap: the previous round's sink becomes
+    the next source, and the sink is the ring HAP farthest from it
+    (`topology.sink_of`).  This is the ``max_in_flight=1`` parity
+    default — the epoch loop hard-codes exactly this rotation."""
+    name: str = "ring"
+
+    def next_round(self, rt, rnd, t: float) -> Tuple[int, int]:
+        source = rnd.sink
+        return source, rt.fls.topo.sink_of(source)
+
+    def next_open_time(self, rt, rnd) -> Optional[float]:
+        # pipeline a successor at the round's first expected arrival:
+        # the fastest satellites are free again and the sink's collection
+        # window runs concurrently with the next downlink
+        return rnd.expected[0][0] if rnd.expected else None
+
+
+@dataclasses.dataclass
+class NextContactHandoff(RingHandoff):
+    """Contact-plan-driven handoff: the next round's source is the PS
+    with the *earliest upcoming satellite contact* at handoff time
+    (``ContactPlan.next_contact_by_node``), so the new global model
+    starts moving as soon as any link exists; with more than one PS the
+    sink is the next-earliest-contact PS (it can start collecting
+    soonest).  Falls back to the ring swap when the plan is exhausted."""
+    name: str = "next_contact"
+
+    def next_round(self, rt, rnd, t: float) -> Tuple[int, int]:
+        tv = rt.plan.next_contact_by_node(t)
+        if not np.isfinite(tv).any():
+            return RingHandoff.next_round(self, rt, rnd, t)
+        source = int(np.argmin(tv))
+        if len(tv) > 1:
+            rest = tv.copy()
+            rest[source] = np.inf
+            sink = (int(np.argmin(rest)) if np.isfinite(rest).any()
+                    else rt.fls.topo.sink_of(source))
+        else:
+            sink = source
+        return source, sink
+
+
+HANDOFF_POLICIES = {
+    "ring": RingHandoff,
+    "next_contact": NextContactHandoff,
+}
+
+
+def make_handoff_policy(spec, name: str = ""):
+    """Handoff policy for a strategy spec ("" -> the ring role swap)."""
+    key = name or getattr(spec, "handoff_policy", "") or "ring"
+    if key not in HANDOFF_POLICIES:
+        raise KeyError(f"unknown handoff policy {key!r}; "
+                       f"available: {sorted(HANDOFF_POLICIES)}")
+    return HANDOFF_POLICIES[key]()

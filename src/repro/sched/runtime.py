@@ -1,4 +1,5 @@
-"""Event-driven asynchronous FL runtime (DESIGN.md §7).
+"""Event-driven asynchronous FL runtime (DESIGN.md §7; the pipelined
+multi-round model is §8).
 
 `core/simulator.py`'s epoch loop advances simulated time one aggregation
 window at a time — enough to reproduce accuracy curves, but it hard-codes
@@ -7,19 +8,39 @@ convergence delay than synchronous FL) is a statement about trigger
 policy, so this module runs the same physics and the same fused device
 program under a priority-queue event loop instead:
 
-    SINK_HANDOFF -> round opens: the contact plan + propagation model give
-      every satellite its global-model receive time; TRAIN_DONE events are
-      scheduled at receive + train_time.
+    SINK_HANDOFF -> round opens: the handoff policy (sched/policies.py)
+      picks the source/sink PS pair — the ring role swap, or the
+      contact-plan-driven earliest-next-contact HAP — and the contact
+      plan + propagation model give every satellite its global-model
+      receive time; TRAIN_DONE events are scheduled at receive +
+      train_time.
     TRAIN_DONE -> the satellite's local model enters the uplink relay; a
       MODEL_ARRIVAL is scheduled at its sink arrival time.
     MODEL_ARRIVAL / TRIGGER_TIMEOUT -> the strategy's trigger policy
       (sched/policies.py) decides when to aggregate: AsyncFLEO's idle
-      window, the sync barrier, or FedAsync per-arrival.
+      window (optionally one deadline per divergence group), the sync
+      barrier, or FedAsync per-arrival.
     trigger -> ALL arrivals ready at the instant batch into ONE fused
       `core/epoch_step.py` dispatch (training + grouping distances +
       aggregation contraction), so async semantics cost no extra device
       round-trips; stragglers carry over device-resident exactly as in the
       epoch loop.
+
+**Pipelining** (DESIGN.md §8): with ``StrategySpec.max_in_flight > 1``
+the runtime keeps a SET of in-flight rounds keyed by round id instead of
+one.  While round k's models are still propagating, a *speculative*
+SINK_HANDOFF (scheduled by the handoff policy's ``next_open_time``, by
+default round k's first expected arrival) may open round k+1 from a
+contact-plan-chosen source, recruiting only satellites that are not
+still training for an earlier round (the overlap invariant).  Every
+event carries its round id, so MODEL_ARRIVALs commit into the right
+round; an arrival addressed to an already-closed round was carried over
+at that round's commit and re-enters aggregation through the successor
+round's stale set — `FLSimulation._fused_commit` stamps it with its
+origin round's epoch, so eq. 13's staleness discount sees exactly the
+paper's semantics.  Commits land in event-time order against the single
+global model; ``max_in_flight=1`` (the default) collapses to the
+single-round loop bit-for-bit.
 
 The runtime owns no model math: it drives `FLSimulation._fused_commit`
 (the epoch loop's post-trigger tail), so under the AsyncFLEO policy its
@@ -37,7 +58,7 @@ import numpy as np
 
 from repro.sched.contacts import ContactPlan
 from repro.sched.events import Event, EventKind, EventQueue
-from repro.sched.policies import make_policy
+from repro.sched.policies import make_handoff_policy, make_policy
 
 
 @dataclasses.dataclass
@@ -56,6 +77,7 @@ class RoundState:
     trigger_scheduled: Optional[float] = None
     committed: bool = False         # fused training dispatch consumed
     closed: bool = False            # roles handed off; ignore stale events
+    group_first: Dict[int, float] = dataclasses.field(default_factory=dict)
 
 
 class EventDrivenRuntime:
@@ -63,9 +85,13 @@ class EventDrivenRuntime:
 
     ``fls`` supplies physics (contact plan, propagation), strategy spec and
     the fused-epoch commit path; ``policy`` defaults to the strategy's
-    (`sched/policies.make_policy`).  ``run`` returns the same
-    ``EpochRecord`` history as ``FLSimulation.run`` — one record per
-    aggregation — so downstream analysis (``convergence_time``) is shared.
+    (`sched/policies.make_policy`), and the handoff policy + pipeline depth
+    come from ``StrategySpec.handoff_policy`` / ``max_in_flight``.  ``run``
+    returns the same ``EpochRecord`` history as ``FLSimulation.run`` — one
+    record per aggregation — so downstream analysis (``convergence_time``)
+    is shared.  ``stats`` exposes pipeline telemetry: rounds opened, the
+    peak number of rounds in flight, speculative opens, and carried-
+    straggler adoptions across round boundaries.
     """
 
     def __init__(self, fls, policy=None, plan: Optional[ContactPlan] = None):
@@ -73,6 +99,9 @@ class EventDrivenRuntime:
         self.sim = fls.sim
         self.spec = fls.spec
         self.policy = policy or make_policy(fls.spec)
+        self.handoff = make_handoff_policy(fls.spec)
+        self.max_in_flight = max(1, int(getattr(fls.spec,
+                                                "max_in_flight", 1)))
         self.plan = plan or fls.plan
         self.events = EventQueue()
         self.rounds: Dict[int, RoundState] = {}
@@ -80,6 +109,13 @@ class EventDrivenRuntime:
         self.beta = 0
         self._round_seq = 0
         self._stop = False
+        # training occupancy per satellite (the §8 overlap invariant:
+        # a satellite trains for at most one in-flight round at a time)
+        self._busy_until = np.zeros(self.plan.num_sats)
+        self.stats: Dict[str, int] = {
+            "rounds_opened": 0, "max_rounds_in_flight": 0,
+            "pipelined_opens": 0, "cross_round_adoptions": 0,
+            "closed_round_arrivals": 0}
 
     # ---- lifecycle ---------------------------------------------------------
 
@@ -101,6 +137,7 @@ class EventDrivenRuntime:
         self.history = []
         self.beta = 0
         self._stop = False
+        self._busy_until[:] = 0.0
         self._start_round(0.0, source=0)
         handlers = {
             EventKind.TRAIN_DONE: self._on_train_done,
@@ -119,15 +156,36 @@ class EventDrivenRuntime:
 
     # ---- round opening -----------------------------------------------------
 
-    def _start_round(self, t: float, source: int) -> None:
+    def _open_count(self) -> int:
+        return sum(1 for r in self.rounds.values() if not r.closed)
+
+    def group_of_sat(self, sat: int) -> int:
+        """Divergence group of a satellite's orbit (-1 = not yet grouped)
+        — the per-group deadline lookup (DESIGN.md §8)."""
+        if sat < 0:
+            return -1
+        self.fls._resolve_pending_dists()       # grouping-state read next
+        g = self.fls.grouping.group_of(int(self.fls.orbit_ids[sat]))
+        return -1 if g is None else int(g)
+
+    def _start_round(self, t: float, source: int, sink: Optional[int] = None,
+                     *, pipelined: bool = False) -> Optional[RoundState]:
         fls, sim = self.fls, self.sim
         if t >= sim.duration_s or self.beta >= self.max_epochs:
-            return
-        sink = fls.topo.sink_of(source)
+            return None
+        if sink is None:
+            sink = fls.topo.sink_of(source)
         with fls._seg("timing"):
             recv = fls._downlink(t, self.bits, source)
         participants = [s for s in range(self.plan.num_sats)
                         if np.isfinite(recv[s])]
+        if self.max_in_flight > 1:
+            # §8 overlap invariant: a satellite still training for an
+            # earlier in-flight round sits this downlink out and joins a
+            # later round instead (single-round mode keeps the epoch
+            # loop's recruit-everyone semantics for parity)
+            participants = [s for s in participants
+                            if self._busy_until[s] <= recv[s]]
         ids_np = np.zeros(0, np.int32)
         expected: List[tuple] = []
         arr_time: Dict[int, float] = {}
@@ -139,36 +197,60 @@ class EventDrivenRuntime:
                     participants, recv, self.bits, sink)
             arr_time = {k: float(t_arr[k])
                         for k in range(len(participants))}
+        if pipelined and not expected:
+            return None     # nobody free to train: the retry in
+            #                 _on_handoff (or the close handoff) covers it
         if not expected and not fls._pend_meta:
-            return                          # constellation drained: halt
+            return None                     # constellation drained: halt
         rnd = RoundState(self._round_seq, self.beta, t, source, sink,
                          participants, ids_np, expected, arr_time)
         self._round_seq += 1
         self.rounds[rnd.idx] = rnd
+        self.stats["rounds_opened"] += 1
+        self.stats["pipelined_opens"] += int(pipelined)
+        self.stats["max_rounds_in_flight"] = max(
+            self.stats["max_rounds_in_flight"], self._open_count())
         for k, s in enumerate(participants):
-            self.events.push(Event(float(t_done[k]), EventKind.TRAIN_DONE,
+            td = float(t_done[k])
+            self._busy_until[s] = max(self._busy_until[s], td)
+            self.events.push(Event(td, EventKind.TRAIN_DONE,
                                    rnd.idx, sat=s, row=k))
         deadline = self.policy.round_deadline(self, rnd)
         if deadline is not None:
             rnd.trigger_scheduled = deadline
             self.events.push(Event(deadline, EventKind.TRIGGER_TIMEOUT,
                                    rnd.idx))
+        if self.max_in_flight > 1 and self._open_count() < self.max_in_flight:
+            # speculatively extend the pipeline: the handoff policy says
+            # when a successor may open while this round is in flight
+            t_next = self.handoff.next_open_time(self, rnd)
+            if t_next is not None and t < t_next < sim.duration_s:
+                self.events.push(Event(t_next, EventKind.SINK_HANDOFF,
+                                       rnd.idx, pipelined=True))
+        return rnd
 
     # ---- handlers ----------------------------------------------------------
 
     def _on_train_done(self, ev: Event) -> None:
+        # the model is transmitted regardless of whether its round is
+        # still open — a closed round's arrival fires as an event and is
+        # routed to the carried-straggler path in _on_arrival
         rnd = self.rounds[ev.round_idx]
         ta = rnd.arr_time.get(ev.row)
-        if not rnd.closed and ta is not None and np.isfinite(ta):
+        if ta is not None and np.isfinite(ta):
             self.events.push(Event(ta, EventKind.MODEL_ARRIVAL, rnd.idx,
                                    sat=ev.sat, row=ev.row))
 
     def _on_arrival(self, ev: Event) -> None:
         rnd = self.rounds[ev.round_idx]
         if rnd.closed:
-            return              # already carried over as a late straggler
+            # the round committed before this model landed: its row was
+            # carried over (device-resident) at commit time and re-enters
+            # through a successor round's stale set (DESIGN.md §8)
+            self.stats["closed_round_arrivals"] += 1
+            return
         rnd.arrived_count += 1
-        trig = self.policy.on_arrival(self, rnd, ev.time)
+        trig = self.policy.on_arrival(self, rnd, ev.time, sat=ev.sat)
         if trig is not None:
             if rnd.trigger_scheduled is None or trig < rnd.trigger_scheduled:
                 rnd.trigger_scheduled = trig
@@ -211,7 +293,21 @@ class EventDrivenRuntime:
         # the round stays registered: stale TRAIN_DONE / MODEL_ARRIVAL
         # events for it may still be queued and look their round up
         rnd = self.rounds[ev.round_idx]
-        self._start_round(ev.time, source=rnd.sink)     # §IV-B3 role swap
+        if self._open_count() >= self.max_in_flight:
+            return              # pipeline full; a close will refill it
+        source, sink = self.handoff.next_round(self, rnd, ev.time)
+        opened = self._start_round(ev.time, source, sink,
+                                   pipelined=ev.pipelined)
+        if opened is None and ev.pipelined:
+            # every eligible satellite is busy: retry when the next one
+            # frees up (strictly later + horizon-guarded, so this
+            # terminates)
+            busy = self._busy_until[self._busy_until > ev.time]
+            if busy.size:
+                t_retry = float(busy.min())
+                if ev.time < t_retry < self.sim.duration_s:
+                    self.events.push(Event(t_retry, EventKind.SINK_HANDOFF,
+                                           ev.round_idx, pipelined=True))
 
     # ---- commit ------------------------------------------------------------
 
@@ -219,8 +315,14 @@ class EventDrivenRuntime:
         fls, spec = self.fls, self.spec
         participants = rnd.participants if not rnd.committed else []
         ids_np = rnd.ids_np if not rnd.committed else np.zeros(0, np.int32)
+        # adoption telemetry: only stragglers that originated in ANOTHER
+        # round (FedAsync drains its own round's carried rows — epoch
+        # stamp equal to rnd.beta — which is not a round boundary)
+        self.stats["cross_round_adoptions"] += sum(
+            1 for (ta, _s, ep) in fls._pend_meta
+            if ta <= t_agg and ep != rnd.beta)
         out = fls._fused_commit(self.prog, self.beta, ids_np, participants,
-                                t_agg, used, late)
+                                t_agg, used, late, train_epoch=rnd.beta)
         rnd.committed = True
         t_agg, metas, info, _losses = out
         if spec.agg_mode == "interval":

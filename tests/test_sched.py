@@ -1,13 +1,19 @@
-"""Event-driven scheduler subsystem (sched/, DESIGN.md §7).
+"""Event-driven scheduler subsystem (sched/, DESIGN.md §7-§8).
 
 Covers: contact-plan compilation (RLE windows reconstruct the visibility
 grid, delays, summary/export), the runtime-vs-epoch-loop parity contract
 (degenerate all-visible plan AND the real paper constellation: aggregated
 weights within atol 1e-5 and the same fused-dispatch count), the sync
 barrier and FedAsync per-arrival policies, policy selection via
-fl/strategies, and the convergence-delay ordering the paper claims
-(async < sync on the same constellation).
+fl/strategies, the convergence-delay ordering the paper claims
+(async < sync on the same constellation), and the pipelined multi-round
+model (§8): overlapping rounds in flight, closed-round arrivals landing
+in the successor's stale set, contact-plan handoff, per-group trigger
+deadlines, and ``max_in_flight=1`` staying bit-identical to the epoch
+loop.
 """
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -16,8 +22,9 @@ from repro.core import FLSimulation, SimConfig
 from repro.core.modelbank import flatten_tree
 from repro.fl import get_strategy
 from repro.sched import (ContactPlan, EventDrivenRuntime, EventKind,
-                         make_policy)
+                         make_handoff_policy, make_policy)
 from repro.sched.policies import (AsyncFLEOPolicy, FedAsyncPolicy,
+                                  NextContactHandoff, RingHandoff,
                                   SyncBarrierPolicy)
 
 from test_epoch_step import TinyFusedTrainer, W0, _staged_downlink
@@ -26,9 +33,12 @@ SIMKW = dict(duration_s=86400.0, train_time_s=300.0,
              use_model_bank=True, use_fused_step=True)
 
 
-def _sim(name, event_driven, **kw):
+def _sim(name, event_driven, *, spec_kw=None, **kw):
     cfg = SimConfig(event_driven=event_driven, **{**SIMKW, **kw})
-    return FLSimulation(get_strategy(name), TinyFusedTrainer(W0), None, cfg)
+    spec = get_strategy(name)
+    if spec_kw:
+        spec = dataclasses.replace(spec, **spec_kw)
+    return FLSimulation(spec, TinyFusedTrainer(W0), None, cfg)
 
 
 def _rows(hist):
@@ -261,6 +271,120 @@ def test_sync_barrier_fires_on_last_arrival():
     assert len(hist) == 2
     assert all(r.num_models == fls.constellation.num_sats for r in hist)
     assert hist[0].time_s < SIMKW["duration_s"]
+
+
+# ---- pipelined multi-round runtime (DESIGN.md §8) --------------------------
+
+PIPE_KW = dict(max_in_flight=3, handoff_policy="next_contact")
+
+
+def test_pipelined_rounds_overlap():
+    """With max_in_flight=3 the runtime actually keeps several rounds in
+    flight at once, commits stay in event-time order, and staleness
+    discounting kicks in for rounds that committed after a later-opened
+    round advanced the epoch counter."""
+    fls = _sim("asyncfleo-twohap", True, spec_kw=PIPE_KW)
+    rt = EventDrivenRuntime(fls)
+    hist = rt.run(W0, max_epochs=8)
+    assert len(hist) == 8
+    assert rt.stats["max_rounds_in_flight"] >= 2
+    assert rt.stats["pipelined_opens"] >= 1
+    times = [r.time_s for r in hist]
+    assert all(b >= a for a, b in zip(times, times[1:]))
+    # at least one commit belonged to a round opened before an earlier
+    # commit advanced beta -> its models were stale -> gamma < 1
+    assert any(r.gamma < 1.0 for r in hist)
+
+
+def test_pipelined_reaches_epoch_count_sooner():
+    """The acceptance ordering: the pipelined runtime fits the same
+    number of aggregations into strictly less simulated time than the
+    single-round runtime on the same constellation."""
+    h1 = _sim("asyncfleo-twohap", True).run(W0, max_epochs=8)
+    hp = _sim("asyncfleo-twohap", True, spec_kw=PIPE_KW).run(
+        W0, max_epochs=8)
+    assert len(h1) == len(hp) == 8
+    assert hp[-1].time_s < h1[-1].time_s
+
+
+def test_closed_round_arrival_lands_in_successor_stale_set():
+    """An arrival addressed to an already-closed round must not be lost:
+    its MODEL_ARRIVAL still fires (and is counted), its row was carried
+    device-resident at commit time, and a successor round's commit
+    adopts it (the §8 late-arrival semantics)."""
+    fls = _sim("asyncfleo-twohap", True,
+               spec_kw=dict(max_in_flight=2, handoff_policy="next_contact"))
+    rt = EventDrivenRuntime(fls)
+    # round 0 recruits all 40 sats; one orbit's uplink only lands at the
+    # next pass (~13.9k s simulated), so run far enough to adopt it
+    hist = rt.run(W0, max_epochs=30)
+    assert len(hist) >= 2
+    # arrivals fired after their round closed...
+    assert rt.stats["closed_round_arrivals"] > 0
+    # ...and carried stragglers were adopted by later rounds' commits
+    assert rt.stats["cross_round_adoptions"] > 0
+    # the adopted models were stamped with their origin round's epoch,
+    # so at least one adopting commit saw stale models (gamma < 1)
+    assert any(r.gamma < 1.0 for r in hist)
+
+
+def test_max_in_flight_one_parity_with_epoch_loop():
+    """Explicit max_in_flight=1 (+ the ring handoff default) must stay
+    bit-identical to the fused epoch loop — the §8 backward-compat
+    contract on top of the PR 3 parity tests."""
+    one = dict(max_in_flight=1, handoff_policy="")
+    a = _sim("asyncfleo-twohap", False, spec_kw=one)
+    b = _sim("asyncfleo-twohap", True, spec_kw=one)
+    ha = a.run(W0, max_epochs=5)
+    hb = b.run(W0, max_epochs=5)
+    assert _rows(ha) == _rows(hb)
+    np.testing.assert_allclose(np.asarray(a._w_flat), np.asarray(b._w_flat),
+                               atol=1e-5)
+    assert a._fused_prog.dispatches == b._fused_prog.dispatches
+    rt_stats_free = EventDrivenRuntime(_sim("asyncfleo-twohap", True,
+                                            spec_kw=one))
+    rt_stats_free.run(W0, max_epochs=3)
+    assert rt_stats_free.stats["pipelined_opens"] == 0
+    assert rt_stats_free.stats["max_rounds_in_flight"] == 1
+
+
+def test_handoff_policy_selection_and_next_contact():
+    assert isinstance(make_handoff_policy(get_strategy("asyncfleo-hap")),
+                      RingHandoff)
+    spec = get_strategy("asyncfleo-pipelined")
+    assert spec.max_in_flight == 3
+    assert isinstance(make_handoff_policy(spec), NextContactHandoff)
+    with pytest.raises(KeyError):
+        make_handoff_policy(spec, name="nope")
+    # the contact-plan query behind NextContactHandoff: per-PS earliest
+    # any-sat contact, consistent with the compiled windows
+    fls = _sim("asyncfleo-twohap", False)
+    tv = fls.plan.next_contact_by_node(0.0)
+    assert tv.shape == (2,)
+    for p in range(2):
+        wins = [w.t_start for w in fls.plan.windows() if w.node == p]
+        if np.isfinite(tv[p]) and wins:
+            assert tv[p] <= min(w for w in wins if w >= 0.0) + fls.plan.timeline.dt_s
+    # pipelined rounds route through it end to end
+    fls2 = _sim("asyncfleo-twohap", True, spec_kw=PIPE_KW)
+    rt = EventDrivenRuntime(fls2)
+    rt.run(W0, max_epochs=4)
+    assert {r.source for r in rt.rounds.values()} <= {0, 1}
+
+
+def test_per_group_deadlines_commit_earlier():
+    """Per-divergence-group trigger windows (§8): shrinking every group's
+    window below agg_timeout_s commits the first round strictly earlier
+    than the global-window default."""
+    tight = tuple((g, 60.0) for g in (-1, 0, 1, 2))
+    a = _sim("asyncfleo-twohap", True)
+    b = _sim("asyncfleo-twohap", True, spec_kw=dict(group_timeouts=tight))
+    pol = make_policy(b.spec)
+    assert isinstance(pol, AsyncFLEOPolicy)
+    assert pol.group_timeouts == dict(tight)
+    ha = a.run(W0, max_epochs=2)
+    hb = b.run(W0, max_epochs=2)
+    assert hb[0].time_s < ha[0].time_s
 
 
 # ---- the paper's headline ordering ----------------------------------------
