@@ -21,8 +21,21 @@ field-by-field schema is documented in ``benchmarks/README.md``).
 
 ``--fail-if-not-lower`` exits nonzero unless the AsyncFLEO policy's
 convergence delay is strictly lower than the sync GS-FedAvg baseline's —
-the acceptance gate for the paper's ordering — and the pipelined row's
-is no higher than single-round async.
+the acceptance gate for the paper's ordering — the pipelined row's is no
+higher than single-round async, AND async still strictly beats sync in
+the most bandwidth-constrained contention cell (``ps_channels=1`` at the
+lowest swept rate): the ordering is a genuinely different claim once a
+PS can no longer absorb every transfer at once.
+
+The **contention sweep** (on by default, ``--skip-contention-sweep`` to
+disable) re-runs the async / pipelined / sync head-to-head under finite
+per-PS link capacity (DESIGN.md §9): every ``ps_channels`` in {1, 4, ∞}
+crossed with a nominal and a bandwidth-constrained ``rate_bps``.  The
+interesting row is the pipelined one — overlapping rounds share the
+same PS pools, so the single-round-vs-pipelined delta shrinks (or
+inverts) as channels get scarce, which the infinite-parallelism model
+could never show.  ``--ps-channels`` additionally applies a channel
+count to the four MAIN policy rows.
 
 ``--cnn-sats 200`` appends the accuracy-aware convergence-delay study:
 the async / pipelined / sync head-to-head re-run with REAL federated CNN
@@ -35,14 +48,16 @@ Usage:  PYTHONPATH=src python benchmarks/sched_bench.py [--target 0.9]
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
-from typing import Dict
+from typing import Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import FLSimulation, SimConfig, convergence_time
+from repro.core.links import LinkModel
 from repro.core.modelbank import FlatSpec, flatten_tree
 from repro.fl.strategies import get_strategy
 from repro.sched import EventDrivenRuntime
@@ -58,6 +73,17 @@ POLICY_ROWS = (
     ("sync_gs_fedavg", "fedisl"),
     ("fedasync_per_arrival", "fedasync"),
 )
+
+# the bandwidth-constrained contention sweep (DESIGN.md §9): the same
+# head-to-head under finite per-PS link capacity.  16 Mb/s is the paper's
+# Table I evaluation rate (transfers are near-free there: the sweep's
+# control); 3 kb/s makes one model transfer ~88 s, so a single-channel PS
+# needs ~1 h of airtime to drain a 40-satellite round — the serialized
+# transfers dominate the round and the 1.26x pipelining win inverts,
+# while 4 channels (FedHAP-style collaborating capacity) restore it
+CONTENTION_ROWS = POLICY_ROWS[:3]
+CONTENTION_RATES = (16e6, 3e3)
+CONTENTION_CHANNELS = (1, 4, None)         # None = infinite parallelism
 
 
 def make_model(key_seed: int = 0, width: int = 64):
@@ -118,11 +144,16 @@ class MeanDistanceEvaluator:
 
 
 def bench_policy(name: str, strategy: str, w0, target: float,
-                 max_epochs: int, duration_s: float) -> Dict:
+                 max_epochs: int, duration_s: float,
+                 ps_channels: Optional[int] = None,
+                 link: Optional[LinkModel] = None) -> Dict:
+    spec = get_strategy(strategy)
+    if ps_channels is not None:
+        spec = dataclasses.replace(spec, ps_channels=ps_channels)
     sim = SimConfig(duration_s=duration_s, dt_s=30.0, train_time_s=300.0,
                     use_model_bank=True, use_fused_step=True,
-                    event_driven=True)
-    fls = FLSimulation(get_strategy(strategy), ConvergingTrainer(w0),
+                    event_driven=True, link=link)
+    fls = FLSimulation(spec, ConvergingTrainer(w0),
                        MeanDistanceEvaluator(), sim)
     rt = EventDrivenRuntime(fls)
     t0 = time.perf_counter()
@@ -144,9 +175,48 @@ def bench_policy(name: str, strategy: str, w0, target: float,
         "sched_stats": dict(rt.stats),
         "max_in_flight": rt.max_in_flight,
         "handoff_policy": rt.handoff.name,
+        "ps_channels": ps_channels,
+        "rate_bps": float((link or LinkModel()).rate_bps),
+        "contention": rt.contention_stats(),
         "wall_s": wall,
         "plan": fls.plan.summary(),
     }
+
+
+def contention_sweep(w0, target: float, max_epochs: int,
+                     duration_s: float) -> Dict:
+    """The async / pipelined / sync head-to-head under finite per-PS link
+    capacity: one cell per (rate_bps, ps_channels) with per-cell speedup
+    ratios.  ``ps_channels=None`` cells are the infinite-parallelism
+    control — bit-identical to the main rows at the same rate."""
+    cells = []
+    for rate in CONTENTION_RATES:
+        link = LinkModel(rate_bps=rate)
+        for k in CONTENTION_CHANNELS:
+            cell = {"rate_bps": float(rate), "ps_channels": k, "rows": []}
+            for name, strategy in CONTENTION_ROWS:
+                r = bench_policy(name, strategy, w0, target, max_epochs,
+                                 duration_s, ps_channels=k, link=link)
+                cell["rows"].append(r)
+            by = {r["policy"]: r["convergence_delay_s"]
+                  for r in cell["rows"]}
+            a, p, s = (by["async_asyncfleo"], by["async_pipelined"],
+                       by["sync_gs_fedavg"])
+            cell["async_vs_sync_speedup"] = (s / a if a and s else None)
+            cell["pipelined_vs_async_speedup"] = (a / p if a and p else None)
+            k_str = "inf" if k is None else str(k)
+            print(f"[contention rate={rate:9.0f} k={k_str:>3s}] "
+                  f"async {_h(a)} h  pipelined {_h(p)} h  sync {_h(s)} h  "
+                  f"async/sync {cell['async_vs_sync_speedup'] or float('nan'):.1f}x  "
+                  f"pipe/async {cell['pipelined_vs_async_speedup'] or float('nan'):.2f}x")
+            cells.append(cell)
+    return {"rates_bps": [float(r) for r in CONTENTION_RATES],
+            "channels": list(CONTENTION_CHANNELS), "cells": cells}
+
+
+def _h(delay_s) -> str:
+    return (f"{delay_s / 3600.0:6.2f}" if delay_s is not None
+            else "  none")
 
 
 def cnn_study(num_sats: int, target: float, max_epochs: int,
@@ -158,8 +228,6 @@ def cnn_study(num_sats: int, target: float, max_epochs: int,
     image shards, so the measured delay includes genuine accuracy
     dynamics (staleness-discounted stale rounds really do contribute
     less).  Opt-in via ``--cnn-sats`` (minutes of wall time, not CI)."""
-    import dataclasses
-
     import jax
 
     from repro.configs import MNIST_CNN
@@ -228,9 +296,18 @@ def main():
     ap.add_argument("--out", default="BENCH_sched.json")
     ap.add_argument("--fail-if-not-lower", action="store_true",
                     help="exit 1 unless AsyncFLEO's convergence delay is "
-                         "strictly lower than the sync GS-FedAvg baseline "
-                         "AND the pipelined runtime's is no higher than "
-                         "single-round async")
+                         "strictly lower than the sync GS-FedAvg baseline, "
+                         "the pipelined runtime's is no higher than "
+                         "single-round async, and async still strictly "
+                         "beats sync in the ps_channels=1 cell at the "
+                         "lowest swept rate (unless the sweep is skipped)")
+    ap.add_argument("--ps-channels", type=int, default=None,
+                    help="finite per-PS link capacity for the MAIN policy "
+                         "rows (StrategySpec.ps_channels; <=0 or omitted "
+                         "= infinite parallelism)")
+    ap.add_argument("--skip-contention-sweep", action="store_true",
+                    help="skip the (rate_bps x ps_channels) contention "
+                         "sweep cells")
     ap.add_argument("--cnn-sats", type=int, default=0,
                     help="also run the accuracy-aware CNN study at this "
                          "constellation size (>= 200 for the ROADMAP item; "
@@ -241,14 +318,17 @@ def main():
     args = ap.parse_args()
 
     w0 = make_model()
-    report = {"target": args.target, "policies": []}
+    main_channels = (args.ps_channels if args.ps_channels
+                     and args.ps_channels > 0 else None)
+    report = {"target": args.target, "ps_channels": main_channels,
+              "policies": []}
     for name, strategy in POLICY_ROWS:
         # per-arrival aggregations are single-model EMA steps, so FedAsync
         # needs ~participants-per-round more of them per unit of progress
         budget = (args.max_epochs * 20 if strategy == "fedasync"
                   else args.max_epochs)
         r = bench_policy(name, strategy, w0, args.target, budget,
-                         args.days * 86400.0)
+                         args.days * 86400.0, ps_channels=main_channels)
         conv = r["convergence_delay_s"]
         print(f"{name:22s} ({strategy:13s}): conv_delay "
               f"{conv / 3600.0 if conv else float('nan'):8.2f} h  "
@@ -269,6 +349,10 @@ def main():
         print(f"pipelined/single-round async speedup: "
               f"{report['pipelined_vs_async_speedup']:.2f}x")
 
+    if not args.skip_contention_sweep:
+        report["contention_sweep"] = contention_sweep(
+            w0, args.target, args.max_epochs, args.days * 86400.0)
+
     if args.cnn_sats:
         report["cnn_study"] = cnn_study(args.cnn_sats, args.cnn_target,
                                         args.cnn_max_epochs,
@@ -287,6 +371,21 @@ def main():
             raise SystemExit(
                 f"pipelined convergence delay ({p}) worse than "
                 f"single-round async ({a})")
+        if not args.skip_contention_sweep:
+            # the paper-relevant NEW ordering: async must beat sync even
+            # when a single-channel PS serializes every transfer at the
+            # bandwidth-constrained rate (DESIGN.md §9)
+            cell = next(c for c in report["contention_sweep"]["cells"]
+                        if c["ps_channels"] == 1
+                        and c["rate_bps"] == min(CONTENTION_RATES))
+            by = {r["policy"]: r["convergence_delay_s"]
+                  for r in cell["rows"]}
+            ac, sc = by["async_asyncfleo"], by["sync_gs_fedavg"]
+            if ac is None or sc is None or not ac < sc:
+                raise SystemExit(
+                    f"contended async convergence delay ({ac}) not "
+                    f"strictly lower than contended sync ({sc}) at "
+                    f"ps_channels=1, rate={min(CONTENTION_RATES)} bps")
 
 
 if __name__ == "__main__":

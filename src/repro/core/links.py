@@ -67,6 +67,16 @@ class LinkModel:
         return (self.transmission_delay(bits, use_shannon, distance_m)
                 + self.propagation_delay(distance_m) + self.proc_delay_s)
 
+    def busy_interval(self, t_start: float, bits: float):
+        """Channel-occupancy interval ``[t_start, t_start + t_t)`` of one
+        transfer that begins transmitting at ``t_start``: the channel is
+        held for the transmission time only — propagation and processing
+        delay the *payload*, not the transmitter.  This is the per-
+        transfer quantity the contention model (`sched/contacts.py`,
+        DESIGN.md §9) serializes; ``total_delay`` stays the payload's
+        end-to-end latency."""
+        return t_start, t_start + self.transmission_delay(bits)
+
 
 def fso_link(rate_bps: float = 1e11, proc_delay_s: float = 0.1) -> LinkModel:
     """Free-space-optical link (paper §III-B: 'AsyncFLEO can actually benefit

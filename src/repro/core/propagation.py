@@ -68,10 +68,22 @@ class PropagationModel:
             out[h] = t0 + self.ring_relay_delay(bits, source, h, t0)
         return out
 
-    def downlink_times(self, t0: float, bits: float, source: int = 0) -> np.ndarray:
+    def downlink_times(self, t0: float, bits: float, source: int = 0,
+                       contention=None) -> np.ndarray:
         """Per-satellite time of receiving the global model (Alg. 1).
         Vectorized: star broadcasts are per-HAP distance vectors; the ISL
-        relay is one broadcast min-plus over the ring-hop matrix."""
+        relay is one broadcast min-plus over the ring-hop matrix.
+
+        ``contention`` (a `sched/contacts.ContentionModel`, optional)
+        charges one transmit-channel grant per PS->sat model copy — each
+        HAP unicasts the global model to every satellite in its star, so
+        finite ``ps_channels`` serialize those transfers per busy interval
+        (the transmission time) instead of the pure delay formula.  Every
+        *visible* satellite is charged, even one a scheduler will not
+        recruit: it still receives the copy and seeds the intra-orbit
+        relay for its orbit-mates (Alg. 1 broadcasts unconditionally).
+        The ISL relay onward is satellite-to-satellite and the HAP ring a
+        dedicated trunk: neither is charged (DESIGN.md §9)."""
         topo = self.topo
         O = topo.constellation.num_orbits
         N = topo.constellation.sats_per_orbit
@@ -80,13 +92,38 @@ class PropagationModel:
         hap_t = self.hap_receive_times(t0, bits, source)
 
         # star broadcast from each HAP to its visible satellites
-        for h in range(topo.num_ps):
-            vis = topo.star_members(h, hap_t[h])
-            if len(vis) == 0:
-                continue
-            cand = hap_t[h] + self.link.total_delay(
-                bits, topo.sat_ps_distances(vis, h, hap_t[h]))
-            recv[vis] = np.minimum(recv[vis], cand)
+        if contention is None:
+            for h in range(topo.num_ps):
+                vis = topo.star_members(h, hap_t[h])
+                if len(vis) == 0:
+                    continue
+                cand = hap_t[h] + self.link.total_delay(
+                    bits, topo.sat_ps_distances(vis, h, hap_t[h]))
+                recv[vis] = np.minimum(recv[vis], cand)
+        else:
+            # per-transfer tx grants (FIFO by request time across HAPs);
+            # a queued grant shifts the copy by (start - request), which
+            # is exactly 0.0 when the channel is free, so uncontended
+            # results stay bit-identical to the vectorized branch
+            ps_ids, reqs, frees, sat_ids = [], [], [], []
+            for h in range(topo.num_ps):
+                vis = topo.star_members(h, hap_t[h])
+                if len(vis) == 0:
+                    continue
+                free = hap_t[h] + self.link.total_delay(
+                    bits, topo.sat_ps_distances(vis, h, hap_t[h]))
+                free = np.broadcast_to(np.asarray(free, np.float64),
+                                       (len(vis),))
+                ps_ids.extend([h] * len(vis))
+                reqs.extend([hap_t[h]] * len(vis))
+                frees.extend(free.tolist())
+                sat_ids.extend(int(s) for s in vis)
+            if sat_ids:
+                t_t = self.link.transmission_delay(bits)
+                starts = contention.grant_tx_many(ps_ids, reqs, t_t)
+                cand = (np.asarray(frees)
+                        + (starts - np.asarray(reqs, np.float64)))
+                np.minimum.at(recv, sat_ids, cand)
 
         # intra-orbit ISL relay from the seeded (visible) satellites:
         # recv[o,i] = min_j recv[o,j] + ringd[j,i] * hop, all orbits at once
@@ -106,6 +143,11 @@ class PropagationModel:
             ps0 = ps[0] if ps else 0
             t_seed = (max(t_vis, hap_t[ps0])
                       + self.sat_ps_delay(bits, seed, ps0, t_vis))
+            if contention is not None:
+                req = max(t_vis, hap_t[ps0])
+                start = contention.grant_tx(
+                    ps0, req, self.link.transmission_delay(bits))
+                t_seed += start - req
             recv_on[orbit] = np.minimum(recv_on[orbit],
                                         t_seed + ringd[seed - sats[0]] * hop)
         return recv_on.reshape(S)
@@ -113,11 +155,18 @@ class PropagationModel:
     # ---- uplink (Alg. 1 lines 11-22) ----------------------------------------
 
     def uplink_many(self, sats: Sequence[int], t_done, bits: float,
-                    sink: int) -> Tuple[np.ndarray, np.ndarray]:
+                    sink: int, contention=None) -> Tuple[np.ndarray,
+                                                         np.ndarray]:
         """Vectorized uplink timing for a whole participant set.
 
         Returns (arrival times at the sink HAP, first-receiving HAP id) as
         (P,) arrays; inf / -1 where a model never reaches a HAP.
+
+        ``contention`` charges one receive-channel grant per model at its
+        first-receiving HAP, held for the transmission time: a PS with
+        finite ``ps_channels`` serializes simultaneous uplinks instead of
+        absorbing them all at once (DESIGN.md §9).  The onward HAP-ring
+        relay to the sink is a dedicated trunk and is not charged.
         """
         topo, tl = self.topo, self.topo.timeline
         sats = np.atleast_1d(np.asarray(sats, dtype=np.int64))
@@ -182,6 +231,18 @@ class PropagationModel:
                 h = vis2[0] if vis2 else 0
                 t_at[p] = t_ready + self.sat_ps_delay(bits, s_star, h, t_ready)
                 hap[p] = h
+
+        # --- receive contention at the first HAP ----------------------------
+        if contention is not None:
+            okc = np.flatnonzero(np.isfinite(t_at))
+            if len(okc):
+                t_t = self.link.transmission_delay(bits)
+                # the PS starts receiving at (unconstrained completion -
+                # transmission time); a queued grant shifts completion by
+                # (start - request), exactly 0.0 when a channel is free
+                req = t_at[okc] - t_t
+                starts = contention.grant_rx_many(hap[okc], req, t_t)
+                t_at[okc] += starts - req
 
         # --- HAP ring relay to the sink (walks the actual ring path) --------
         out = np.full(P, np.inf)

@@ -86,6 +86,27 @@ class EpochRecord:
     stale_groups: int
 
 
+def split_min_models(arrivals, t_agg: float, min_models: int):
+    """(t_agg, used, late) partition of SORTED arrivals at ``t_agg`` with
+    the ``min_models`` backstop: when fewer than ``min_models`` arrivals
+    land inside the window, the first ``min_models`` are aggregated anyway
+    and ``t_agg`` moves to the last of them.
+
+    ``used`` is always a *prefix* of the sorted arrivals and ``late`` the
+    exact remainder, so ``used + late == arrivals`` holds on every branch
+    — in particular, arrivals *tied* at the backstop's ``t_agg`` beyond
+    the ``min_models`` slice are carried as late, never dropped (the
+    conservation property tests/test_property.py pins).  ONE shared
+    implementation for `FLSimulation._trigger` and the per-group
+    `sched/policies.AsyncFLEOPolicy.split` — neither may fork it.
+    """
+    used = [a for a in arrivals if a[0] <= t_agg]
+    if len(used) < min_models:
+        used = arrivals[:min_models]
+        t_agg = used[-1][0] if used else t_agg
+    return t_agg, used, arrivals[len(used):]
+
+
 class FLSimulation:
     def __init__(self, spec: StrategySpec, trainer, evaluator,
                  sim: SimConfig, constellation: Optional[WalkerDelta] = None):
@@ -102,10 +123,17 @@ class FLSimulation:
         # the compiled contact plan owns the downlink/uplink timing rules
         # (including the use_isl switch) and is shared with the
         # event-driven runtime; lazy import keeps core <-> sched acyclic
-        from repro.sched.contacts import ContactPlan
+        from repro.sched.contacts import ContactPlan, ContentionModel
         self.plan = ContactPlan(self.constellation, self.nodes,
                                 self.timeline, self.topo, self.prop,
                                 use_isl=spec.use_isl)
+        if getattr(spec, "ps_channels", None) is not None:
+            # finite per-PS link capacity (DESIGN.md §9): every sat<->PS
+            # model transfer serializes over spec.ps_channels parallel
+            # channels; None keeps infinite parallelism with NO contention
+            # state at all (the parity default)
+            self.plan.contention = ContentionModel(len(self.nodes),
+                                                   int(spec.ps_channels))
         self.grouping = GroupingState(num_groups=spec.num_groups)
         self.orbit_ids = self.constellation.orbit_ids()
         # persistent per-satellite bookkeeping
@@ -163,21 +191,22 @@ class FLSimulation:
     # ---- shared per-epoch host metadata ------------------------------
 
     def _trigger(self, arrivals, t: float):
-        """Aggregation trigger: (t_agg, used, late) from sorted arrivals."""
+        """Aggregation trigger: (t_agg, used, late) from sorted arrivals.
+        ``used`` is a prefix of ``arrivals`` and ``late`` the exact
+        remainder (``used + late == arrivals`` — no drops, even on tied
+        arrival times)."""
         sim, spec = self.sim, self.spec
         if spec.sync:
+            # barrier: last expected arrival, capped by the straggler
+            # stall AND the simulation horizon — a barrier round must not
+            # commit an epoch past the end of the simulation
             t_agg = min(arrivals[-1][0] if arrivals else t,
-                        t + sim.sync_stall_s)
+                        t + sim.sync_stall_s, sim.duration_s)
             used = [a for a in arrivals if a[0] <= t_agg]
-        else:
-            t_first = arrivals[0][0] if arrivals else t
-            t_agg = min(t_first + sim.agg_timeout_s, sim.duration_s)
-            used = [a for a in arrivals if a[0] <= t_agg]
-            if len(used) < sim.min_models:
-                used = arrivals[: sim.min_models]
-                t_agg = used[-1][0] if used else t_agg
-        late = [a for a in arrivals if a[0] > t_agg]
-        return t_agg, used, late
+            return t_agg, used, arrivals[len(used):]
+        t_first = arrivals[0][0] if arrivals else t
+        t_agg = min(t_first + sim.agg_timeout_s, sim.duration_s)
+        return split_min_models(arrivals, t_agg, sim.min_models)
 
     def _mode_weights(self, metas: List[SatelliteMeta], beta: int,
                       groups: Optional[Dict[int, List[int]]]):
@@ -685,6 +714,8 @@ class FLSimulation:
         runtime.  Returns (model bits, fused program or None, stacked?)."""
         bits = model_bits(w0)
         self.grouping.set_reference(w0)
+        if self.plan.contention is not None:
+            self.plan.contention.reset()   # channel pools are per-run state
         stacked = self.sim.use_model_bank and hasattr(self.trainer,
                                                       "train_many_stacked")
         fused = None

@@ -24,6 +24,7 @@ trade-off with a fixed-interval staleness-weighted aggregation (DESIGN.md §3).
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +54,14 @@ class StrategySpec:
     # ((group_id, window_s), ...) pairs (group -1 = not-yet-grouped
     # orbits); empty keeps the single global agg_timeout_s window
     group_timeouts: tuple = ()
+    # finite per-PS link capacity (sched/contacts.ContentionModel,
+    # DESIGN.md §9): how many model transfers a PS can send (and,
+    # separately, receive) in parallel — concurrent transfers at the same
+    # PS beyond this serialize FIFO, including transfers from different
+    # in-flight rounds.  None = infinite parallelism with no contention
+    # state at all, bit-identical to the pre-contention semantics (the
+    # parity default)
+    ps_channels: Optional[int] = None
 
 
 STRATEGIES = {

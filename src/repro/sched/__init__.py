@@ -1,10 +1,13 @@
-# Event-driven async FL scheduling (DESIGN.md §7-§8): contact plans
+# Event-driven async FL scheduling (DESIGN.md §7-§9): contact plans
 # compiled from orbital geometry, a priority-queue runtime that pipelines
 # up to StrategySpec.max_in_flight overlapping rounds over the fused
 # epoch program, pluggable trigger policies (AsyncFLEO / sync barrier /
-# FedAsync, with optional per-divergence-group deadlines) and sink
-# handoff policies (ring role swap / contact-plan next-contact).
-from repro.sched.contacts import ContactPlan, ContactWindow
+# FedAsync, with optional per-divergence-group deadlines), sink
+# handoff policies (ring role swap / contact-plan next-contact), and
+# finite per-PS link capacity (ContentionModel: StrategySpec.ps_channels
+# parallel tx/rx channels per PS, FIFO grants, cross-round serialization).
+from repro.sched.contacts import (ChannelPool, ContactPlan, ContactWindow,
+                                  ContentionModel)
 from repro.sched.events import Event, EventKind, EventQueue
 from repro.sched.policies import (AsyncFLEOPolicy, FedAsyncPolicy,
                                   HANDOFF_POLICIES, NextContactHandoff,
@@ -12,7 +15,8 @@ from repro.sched.policies import (AsyncFLEOPolicy, FedAsyncPolicy,
                                   make_handoff_policy, make_policy)
 from repro.sched.runtime import EventDrivenRuntime, RoundState
 
-__all__ = ["ContactPlan", "ContactWindow", "Event", "EventKind",
+__all__ = ["ChannelPool", "ContactPlan", "ContactWindow", "ContentionModel",
+           "Event", "EventKind",
            "EventQueue", "AsyncFLEOPolicy", "SyncBarrierPolicy",
            "FedAsyncPolicy", "POLICIES", "make_policy",
            "RingHandoff", "NextContactHandoff", "HANDOFF_POLICIES",

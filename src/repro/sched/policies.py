@@ -51,9 +51,11 @@ deadlines.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.core.simulator import split_min_models
 
 Arrival = Tuple[float, int, int]                 # (t_arrival, sat, bank row)
 
@@ -101,15 +103,11 @@ class AsyncFLEOPolicy:
             # instants (the parity contract)
             return rt.fls._trigger(rnd.expected, rnd.t_start)
         # per-group mode: the earliest group deadline IS the aggregation
-        # instant; min_models backstop as in `_trigger`'s async branch
-        arrivals = rnd.expected
+        # instant; the min_models backstop is the SAME helper `_trigger`'s
+        # async branch uses, so the two can't drift (and tied arrivals at
+        # the backstop instant are carried, not dropped)
         t_agg = min(t_fired, rt.sim.duration_s)
-        used = [a for a in arrivals if a[0] <= t_agg]
-        if len(used) < rt.sim.min_models:
-            used = arrivals[: rt.sim.min_models]
-            t_agg = used[-1][0] if used else t_agg
-        late = [a for a in arrivals if a[0] > t_agg]
-        return t_agg, used, late
+        return split_min_models(rnd.expected, t_agg, rt.sim.min_models)
 
     def round_complete(self, rnd) -> bool:
         return True
@@ -126,7 +124,10 @@ class SyncBarrierPolicy:
     def round_deadline(self, rt, rnd) -> Optional[float]:
         if not rnd.expected:
             return rnd.t_start               # nothing to wait for
-        return rnd.t_start + rt.sim.sync_stall_s
+        # horizon-clamped like the AsyncFLEO / FedAsync deadlines: a
+        # barrier stall must not fire (and commit an epoch) past the end
+        # of the simulation
+        return min(rnd.t_start + rt.sim.sync_stall_s, rt.sim.duration_s)
 
     def on_arrival(self, rt, rnd, t: float, sat: int = -1
                    ) -> Optional[float]:
@@ -230,19 +231,37 @@ class NextContactHandoff(RingHandoff):
     (``ContactPlan.next_contact_by_node``), so the new global model
     starts moving as soon as any link exists; with more than one PS the
     sink is the next-earliest-contact PS (it can start collecting
-    soonest).  Falls back to the ring swap when the plan is exhausted."""
+    soonest).  Ties on contact time break toward the PS with the lowest
+    channel occupancy (pending tx backlog for the source, rx backlog for
+    the sink — `ContentionModel.backlog`, DESIGN.md §9), so under finite
+    ``ps_channels`` overlapping rounds spread across the least-loaded
+    HAPs, the FedHAP-style collaborative-transfer effect.  Without a
+    contention model every backlog is 0 and the lowest PS id wins —
+    identical to the historical ``argmin``.  Falls back to the ring swap
+    when the plan is exhausted."""
     name: str = "next_contact"
+
+    @staticmethod
+    def _least_busy(rt, candidates: List[int], t: float, kind: str) -> int:
+        ctn = getattr(rt.plan, "contention", None)
+        if ctn is None or len(candidates) == 1:
+            return candidates[0]
+        return min(candidates, key=lambda p: (ctn.backlog(kind, p, t), p))
 
     def next_round(self, rt, rnd, t: float) -> Tuple[int, int]:
         tv = rt.plan.next_contact_by_node(t)
         if not np.isfinite(tv).any():
             return RingHandoff.next_round(self, rt, rnd, t)
-        source = int(np.argmin(tv))
+        cands = [int(p) for p in np.flatnonzero(tv == tv.min())]
+        source = self._least_busy(rt, cands, t, "tx")
         if len(tv) > 1:
             rest = tv.copy()
             rest[source] = np.inf
-            sink = (int(np.argmin(rest)) if np.isfinite(rest).any()
-                    else rt.fls.topo.sink_of(source))
+            if np.isfinite(rest).any():
+                sc = [int(p) for p in np.flatnonzero(rest == rest.min())]
+                sink = self._least_busy(rt, sc, t, "rx")
+            else:
+                sink = rt.fls.topo.sink_of(source)
         else:
             sink = source
         return source, sink

@@ -42,6 +42,17 @@ paper's semantics.  Commits land in event-time order against the single
 global model; ``max_in_flight=1`` (the default) collapses to the
 single-round loop bit-for-bit.
 
+**Link contention** (DESIGN.md §9): with ``StrategySpec.ps_channels``
+set, the contact plan carries a `ContentionModel` — per-PS transmit and
+receive pools of that many parallel channels — and every round open
+(downlink) and uplink the runtime times through the plan consults AND
+updates the pools, so transfers at the same PS serialize across
+overlapping rounds.  A speculative open that aborts rolls its grants
+back (`ContentionModel.snapshot`/``restore``); ``contention_stats()``
+exposes grants, queue-wait totals and per-PS utilization.
+``ps_channels=None`` (default) attaches no model at all — bit-identical
+to the uncontended runtime.
+
 The runtime owns no model math: it drives `FLSimulation._fused_commit`
 (the epoch loop's post-trigger tail), so under the AsyncFLEO policy its
 aggregation instants, weights and dispatch counts are *identical* to the
@@ -159,6 +170,15 @@ class EventDrivenRuntime:
     def _open_count(self) -> int:
         return sum(1 for r in self.rounds.values() if not r.closed)
 
+    def contention_stats(self) -> Optional[Dict]:
+        """Per-PS link-capacity telemetry (None without a ContentionModel,
+        i.e. ``StrategySpec.ps_channels=None``): channel grants, FIFO
+        queue-wait totals and per-PS utilization for the transmit and
+        receive pools (DESIGN.md §9) — round opens and uplinks consult
+        and update this occupancy through the shared contact plan."""
+        ctn = self.plan.contention
+        return None if ctn is None else ctn.stats(self.sim.duration_s)
+
     def group_of_sat(self, sat: int) -> int:
         """Divergence group of a satellite's orbit (-1 = not yet grouped)
         — the per-group deadline lookup (DESIGN.md §8)."""
@@ -175,6 +195,11 @@ class EventDrivenRuntime:
             return None
         if sink is None:
             sink = fls.topo.sink_of(source)
+        # timing a round consumes channel grants when a ContentionModel is
+        # attached (DESIGN.md §9); if the open aborts below, roll the
+        # grants back so a round that never ran leaves no occupancy behind
+        ctn = self.plan.contention
+        snap = ctn.snapshot() if ctn is not None else None
         with fls._seg("timing"):
             recv = fls._downlink(t, self.bits, source)
         participants = [s for s in range(self.plan.num_sats)
@@ -198,9 +223,13 @@ class EventDrivenRuntime:
             arr_time = {k: float(t_arr[k])
                         for k in range(len(participants))}
         if pipelined and not expected:
+            if snap is not None:
+                ctn.restore(snap)
             return None     # nobody free to train: the retry in
             #                 _on_handoff (or the close handoff) covers it
         if not expected and not fls._pend_meta:
+            if snap is not None:
+                ctn.restore(snap)
             return None                     # constellation drained: halt
         rnd = RoundState(self._round_seq, self.beta, t, source, sink,
                          participants, ids_np, expected, arr_time)

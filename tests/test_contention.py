@@ -1,0 +1,232 @@
+"""PS link-capacity / contention subsystem (sched/contacts.ContentionModel,
+DESIGN.md §9).
+
+Covers: ChannelPool grant semantics (serialization, parallel channels,
+FIFO by request time, gap backfilling, backlog, snapshot/restore), the
+off-switch parity contract (ps_channels=None attaches no model;
+ps_channels large enough to never queue is bit-identical to None), the
+epoch-loop-vs-runtime parity with contention ON (both drivers share the
+plan's pools), cross-round serialization degrading the pipelined
+runtime, rollback of aborted speculative opens, the NextContactHandoff
+occupancy tie-break, and telemetry.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import FLSimulation, SimConfig
+from repro.core.links import LinkModel
+from repro.fl import get_strategy
+from repro.sched import ContentionModel, EventDrivenRuntime
+from repro.sched.contacts import ChannelPool
+from repro.sched.policies import NextContactHandoff
+
+from test_epoch_step import TinyFusedTrainer, W0
+
+SIMKW = dict(duration_s=86400.0, train_time_s=300.0,
+             use_model_bank=True, use_fused_step=True)
+# W0 is 9 params = 288 bits; at 10 b/s one transfer holds a channel for
+# 28.8 s — long enough that a 40-satellite round must serialize visibly
+SLOW = LinkModel(rate_bps=10.0)
+
+
+def _sim(name, event_driven, *, spec_kw=None, **kw):
+    cfg = SimConfig(event_driven=event_driven, **{**SIMKW, **kw})
+    spec = get_strategy(name)
+    if spec_kw:
+        spec = dataclasses.replace(spec, **spec_kw)
+    return FLSimulation(spec, TinyFusedTrainer(W0), None, cfg)
+
+
+def _rows(hist):
+    return [(r.epoch, round(r.time_s, 6), r.num_models,
+             round(r.gamma, 6), r.stale_groups) for r in hist]
+
+
+# ---- ChannelPool / ContentionModel unit semantics ---------------------------
+
+def test_busy_interval_is_transmission_time_only():
+    """The channel-occupancy interval of a transfer is its transmission
+    time, not its end-to-end delay: propagation + processing delay the
+    payload, not the transmitter (DESIGN.md §9)."""
+    t0, t1 = SLOW.busy_interval(100.0, 288.0)
+    assert t0 == 100.0
+    assert t1 - t0 == pytest.approx(SLOW.transmission_delay(288.0))
+    assert t1 - t0 < SLOW.total_delay(288.0, 500e3)
+
+
+def test_single_channel_serializes_fifo():
+    p = ChannelPool(1, 1)
+    assert p.grant(0, 0.0, 10.0) == 0.0
+    assert p.grant(0, 0.0, 10.0) == 10.0     # queued behind the first
+    assert p.grant(0, 5.0, 10.0) == 20.0     # and behind the second
+    assert p.grant(0, 40.0, 10.0) == 40.0    # free again
+    assert p.grants == 4
+    assert p.queue_wait_s == pytest.approx(10.0 + 15.0)
+    assert p.busy_s[0] == pytest.approx(40.0)
+
+
+def test_parallel_channels_and_infinite():
+    p = ChannelPool(1, 2)
+    assert [p.grant(0, 0.0, 10.0) for _ in range(3)] == [0.0, 0.0, 10.0]
+    inf = ChannelPool(1, None)
+    assert [inf.grant(0, t, 100.0) for t in (0.0, 1.0, 2.0)] == [0.0, 1.0,
+                                                                 2.0]
+    assert inf.grants == 3                    # telemetry still counted
+
+
+def test_gap_backfill_between_reservations():
+    """A far-future reservation must not lock the idle gap before it —
+    the cross-round case where a straggler's slot is granted hours ahead
+    at round open."""
+    p = ChannelPool(1, 1)
+    assert p.grant(0, 10000.0, 10.0) == 10000.0
+    assert p.grant(0, 0.0, 10.0) == 0.0       # backfills the idle gap
+    assert p.grant(0, 9995.0, 10.0) == 10010.0   # gap too small: queues
+    assert p.backlog(0, 9000.0) == pytest.approx(30.0 - 10.0)
+
+
+def test_grant_many_fifo_by_request_time():
+    c = ContentionModel(2, 1)
+    starts = c.grant_rx_many([0, 0, 1], [5.0, 0.0, 3.0], 10.0)
+    # the t=0 request is granted first (FIFO by request time), so the
+    # t=5 request queues behind it; PS 1 is an independent pool
+    np.testing.assert_allclose(starts, [10.0, 0.0, 3.0])
+    assert c.rx.queue_wait_s == pytest.approx(5.0)
+
+
+def test_snapshot_restore_rolls_back_grants():
+    c = ContentionModel(1, 1)
+    c.grant_tx(0, 0.0, 10.0)
+    snap = c.snapshot()
+    c.grant_tx(0, 0.0, 10.0)
+    c.grant_rx(0, 0.0, 10.0)
+    c.restore(snap)
+    assert c.tx.grants == 1 and c.rx.grants == 0
+    assert c.grant_tx(0, 0.0, 10.0) == 10.0   # only the first grant stands
+
+
+def test_stats_shape():
+    c = ContentionModel(2, 4)
+    c.grant_tx(1, 0.0, 50.0)
+    s = c.stats(100.0)
+    assert s["ps_channels"] == 4
+    assert s["tx"]["grants"] == 1
+    assert s["tx"]["busy_s"] == [0.0, 50.0]
+    assert s["tx"]["utilization"][1] == pytest.approx(50.0 / 400.0)
+    assert s["rx"]["grants"] == 0
+
+
+# ---- the off-switch parity contract ----------------------------------------
+
+def test_ps_channels_none_attaches_no_model():
+    fls = _sim("asyncfleo-twohap", True)
+    assert fls.spec.ps_channels is None
+    assert fls.plan.contention is None        # zero contention state
+
+
+def test_huge_channel_count_bit_identical_to_off():
+    """ps_channels large enough that no transfer ever queues must leave
+    every aggregation instant and the final weights bit-identical to the
+    no-contention path — the contended code path itself is time-neutral
+    when channels are free (the §9 off-switch parity contract)."""
+    a = _sim("asyncfleo-twohap", True, link=SLOW)
+    b = _sim("asyncfleo-twohap", True, link=SLOW,
+             spec_kw=dict(ps_channels=10 ** 6))
+    ha = a.run(W0, max_epochs=5)
+    hb = b.run(W0, max_epochs=5)
+    assert _rows(ha) == _rows(hb)
+    np.testing.assert_array_equal(np.asarray(a._w_flat),
+                                  np.asarray(b._w_flat))
+
+
+def test_parity_epoch_loop_vs_runtime_with_contention_on():
+    """Contention is physics, not policy: with the SAME finite channel
+    count the fused epoch loop and the event runtime still agree exactly
+    (both route timing through the shared plan's pools in the same
+    order)."""
+    kw = dict(link=SLOW, spec_kw=dict(ps_channels=1))
+    a = _sim("asyncfleo-twohap", False, **kw)
+    b = _sim("asyncfleo-twohap", True, **kw)
+    ha = a.run(W0, max_epochs=4)
+    hb = b.run(W0, max_epochs=4)
+    assert _rows(ha) == _rows(hb)
+    np.testing.assert_allclose(np.asarray(a._w_flat), np.asarray(b._w_flat),
+                               atol=1e-5)
+    assert a._fused_prog.dispatches == b._fused_prog.dispatches
+
+
+# ---- contention actually binds ----------------------------------------------
+
+def test_single_channel_serializes_a_round():
+    """k=1 with slow links: the same scenario converges strictly later
+    than uncontended, and the pools report queue waits."""
+    a = _sim("asyncfleo-twohap", True, link=SLOW)
+    b = _sim("asyncfleo-twohap", True, link=SLOW,
+             spec_kw=dict(ps_channels=1))
+    ha = a.run(W0, max_epochs=5)
+    rb = EventDrivenRuntime(b)
+    hb = rb.run(W0, max_epochs=5)
+    assert hb[-1].time_s > ha[-1].time_s
+    st = rb.contention_stats()
+    assert st["ps_channels"] == 1
+    assert st["rx"]["grants"] > 0 and st["tx"]["grants"] > 0
+    assert st["rx"]["queue_wait_s"] > 0.0
+    assert max(st["rx"]["utilization"]) > 0.0
+
+
+def test_cross_round_contention_degrades_pipelining():
+    """The §9 headline: overlapping rounds share the same per-PS pools,
+    so the pipelined runtime loses (part of) its win under k=1 — the
+    free lunch max_in_flight>1 got from infinite parallelism is gone."""
+    pipe = dict(max_in_flight=3, handoff_policy="next_contact")
+    free = _sim("asyncfleo-twohap", True, link=SLOW, spec_kw=pipe)
+    hf = free.run(W0, max_epochs=8)
+    tight = _sim("asyncfleo-twohap", True, link=SLOW,
+                 spec_kw={**pipe, "ps_channels": 1})
+    rt = EventDrivenRuntime(tight)
+    ht = rt.run(W0, max_epochs=8)
+    assert len(hf) == len(ht) == 8
+    assert ht[-1].time_s > hf[-1].time_s
+    assert rt.contention_stats()["rx"]["queue_wait_s"] > 0.0
+
+
+def test_aborted_speculative_open_rolls_back_grants():
+    """A speculative open that recruits nobody (everyone busy) must leave
+    the channel pools exactly as it found them — no occupancy ghosts from
+    rounds that never ran."""
+    fls = _sim("asyncfleo-twohap", True, link=SLOW,
+               spec_kw=dict(max_in_flight=3, handoff_policy="next_contact",
+                            ps_channels=1))
+    rt = EventDrivenRuntime(fls)
+    rt.bits, rt.prog, _stacked = fls._init_run(W0)
+    rt.max_epochs = 5
+    rt.target = None
+    ctn = fls.plan.contention
+    before = (ctn.tx.grants, ctn.rx.grants, ctn.snapshot())
+    rt._busy_until[:] = 1e9               # every satellite mid-training
+    assert rt._start_round(100.0, 0, pipelined=True) is None
+    assert (ctn.tx.grants, ctn.rx.grants) == before[:2]
+    assert ctn.tx.res == before[2][0].res and ctn.rx.res == before[2][1].res
+
+
+# ---- handoff occupancy tie-break -------------------------------------------
+
+def test_next_contact_handoff_breaks_ties_by_occupancy():
+    """Two PSs with identical next-contact times (degenerate all-visible
+    plan): the source tie breaks toward the PS with the lower pending tx
+    backlog; without any backlog the lowest id wins (the historical
+    argmin)."""
+    fls = _sim("asyncfleo-twohap", True,
+               spec_kw=dict(handoff_policy="next_contact", ps_channels=1))
+    fls.timeline.grid[:] = True
+    rt = EventDrivenRuntime(fls)
+    hand = NextContactHandoff()
+    assert hand.next_round(rt, None, 0.0)[0] == 0
+    fls.plan.contention.grant_tx(0, 0.0, 5000.0)   # load PS 0's tx pool
+    src, sink = hand.next_round(rt, None, 0.0)
+    assert src == 1
+    fls.plan.contention.grant_rx(1, 0.0, 5000.0)   # and PS 1's rx pool
+    src, sink = hand.next_round(rt, None, 0.0)
+    assert (src, sink) == (1, 0)          # sink tie-break consults rx

@@ -2,6 +2,8 @@
 
 Skips cleanly when ``hypothesis`` is not installed (it is not part of the
 runtime container; CI installs it)."""
+from types import SimpleNamespace
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,12 +12,16 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.core import FLSimulation, SimConfig
 from repro.core.aggregation import SatelliteMeta, asyncfleo_aggregate, fedavg
 from repro.core.constellation import WalkerDelta
 from repro.core.grouping import group_by_gaps
+from repro.fl import get_strategy
 from repro.kernels.fed_agg.ops import fed_agg
 from repro.kernels.fed_agg.ref import fed_agg_flat_ref
 from repro.models.scan_ops import chunked_scan, recurrent_scan
+from repro.sched.policies import (AsyncFLEOPolicy, FedAsyncPolicy,
+                                  SyncBarrierPolicy)
 
 SETTINGS = dict(max_examples=20, deadline=None)
 
@@ -86,6 +92,54 @@ def test_fed_agg_kernel_property(c, n, bw, seed):
     ref = fed_agg_flat_ref(stack, gamma, base, bw)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=1e-4, rtol=1e-4)
+
+
+def _trigger_stub(sync: bool, min_models: int, timeout_s: float,
+                  stall_s: float, duration_s: float):
+    """`FLSimulation._trigger` reads only .sim and .spec — skip __init__
+    (no constellation/timeline needed to exercise the split branches)."""
+    fls = FLSimulation.__new__(FLSimulation)
+    fls.sim = SimConfig(duration_s=duration_s, agg_timeout_s=timeout_s,
+                        sync_stall_s=stall_s, min_models=min_models)
+    fls.spec = get_strategy("fedisl" if sync else "asyncfleo-gs")
+    return fls
+
+
+@settings(**SETTINGS)
+@given(steps=st.lists(st.integers(0, 40), min_size=0, max_size=10),
+       dt=st.sampled_from([10.0, 30.0]),
+       min_models=st.integers(1, 6),
+       window=st.integers(0, 30),
+       sync=st.booleans(),
+       fired=st.integers(0, 50),
+       horizon=st.integers(5, 60))
+def test_trigger_splits_conserve_arrivals(steps, dt, min_models, window,
+                                          sync, fired, horizon):
+    """Every trigger policy's split must partition a round's arrivals
+    EXACTLY — ``used + late == arrivals``, no drops, no duplicates — on
+    every branch: the sync barrier, the async window, the min_models
+    backstop, per-group deadlines, and FedAsync per-arrival.  Arrival
+    times are dt-grid-quantized so exact ties (the ISSUE-5 regression
+    class: tied arrivals at the backstop instant used to vanish) are
+    common."""
+    times = sorted(s * dt for s in steps)       # quantized -> exact ties
+    arrivals = [(t, i, i) for i, t in enumerate(times)]
+    fls = _trigger_stub(sync, min_models, window * dt, 20 * dt,
+                        horizon * dt)
+    t_agg, used, late = fls._trigger(arrivals, 0.0)
+    assert used + late == arrivals              # exact partition
+    assert used == arrivals[:len(used)]         # used is always a prefix
+    assert all(a[0] <= t_agg for a in used) or len(used) == min(
+        min_models, len(arrivals))              # backstop branch
+    rt = SimpleNamespace(sim=fls.sim, fls=fls)
+    rnd = SimpleNamespace(expected=arrivals, t_start=0.0, committed=False)
+    for pol in (AsyncFLEOPolicy(),              # delegates to _trigger
+                AsyncFLEOPolicy(group_timeouts={0: window * dt}),
+                SyncBarrierPolicy(),
+                FedAsyncPolicy()):
+        t2, u2, l2 = pol.split(rt, rnd, fired * dt)
+        assert u2 + l2 == arrivals, pol.name
+        assert u2 == arrivals[:len(u2)], pol.name
 
 
 @settings(max_examples=10, deadline=None)

@@ -22,7 +22,7 @@ from repro.core import FLSimulation, SimConfig
 from repro.core.modelbank import flatten_tree
 from repro.fl import get_strategy
 from repro.sched import (ContactPlan, EventDrivenRuntime, EventKind,
-                         make_handoff_policy, make_policy)
+                         RoundState, make_handoff_policy, make_policy)
 from repro.sched.policies import (AsyncFLEOPolicy, FedAsyncPolicy,
                                   NextContactHandoff, RingHandoff,
                                   SyncBarrierPolicy)
@@ -385,6 +385,59 @@ def test_per_group_deadlines_commit_earlier():
     ha = a.run(W0, max_epochs=2)
     hb = b.run(W0, max_epochs=2)
     assert hb[0].time_s < ha[0].time_s
+
+
+# ---- trigger-split bugfix regressions (ISSUE 5) ----------------------------
+
+def test_min_models_backstop_keeps_tied_arrivals():
+    """dt-grid-quantized uplink times make exact ties common: arrivals
+    tied at the backstop's t_agg beyond the min_models slice must be
+    carried as late, never dropped (pre-fix, `late = [a > t_agg]` lost
+    them — the model vanished from the simulation)."""
+    fls = _sim("asyncfleo-twohap", False)
+    assert fls.sim.min_models == 2
+    dt = fls.sim.dt_s
+    arrivals = [(0.0, 0, 0)] + [(500 * dt, s, s) for s in (1, 2, 3)]
+    t_agg, used, late = fls._trigger(arrivals, 0.0)
+    assert t_agg == 500 * dt              # the backstop moved the instant
+    assert used == arrivals[:2]
+    assert late == arrivals[2:]           # the tied arrivals are carried
+    assert used + late == arrivals
+
+
+def test_per_group_split_keeps_tied_arrivals():
+    """The per-group AsyncFLEO split routes through the SAME shared
+    min_models helper as `_trigger` (it used to re-implement it with the
+    same tied-arrival drop)."""
+    fls = _sim("asyncfleo-twohap", True)
+    rt = EventDrivenRuntime(fls)
+    pol = AsyncFLEOPolicy(group_timeouts={0: 60.0})
+    dt = fls.sim.dt_s
+    arrivals = [(0.0, 0, 0)] + [(500 * dt, s, s) for s in (1, 2, 3)]
+    rnd = RoundState(0, 0, 0.0, 0, 0, [0, 1, 2, 3], np.zeros(0, np.int32),
+                     arrivals, {})
+    t_agg, used, late = pol.split(rt, rnd, 60.0)
+    assert t_agg == 500 * dt
+    assert used == arrivals[:2] and late == arrivals[2:]
+    assert used + late == arrivals
+
+
+def test_sync_round_deadline_clamped_to_horizon():
+    """A barrier round whose every arrival lands past a short horizon
+    must commit AT the horizon, not at the unclamped arrival/stall
+    instant (pre-fix the epoch was recorded past the end of the
+    simulation)."""
+    fls = _sim("fedhap", True, duration_s=550.0, train_time_s=600.0)
+    rt = EventDrivenRuntime(fls)
+    hist = rt.run(W0, max_epochs=3)
+    assert hist                           # the barrier round still commits
+    assert all(r.time_s <= fls.sim.duration_s for r in hist)
+    # and the policy-level stall deadline itself is horizon-clamped, like
+    # the AsyncFLEO / FedAsync deadlines
+    pol = SyncBarrierPolicy()
+    rnd = RoundState(0, 0, 500.0, 0, 0, [0], np.zeros(0, np.int32),
+                     [(600.0, 0, 0)], {})
+    assert pol.round_deadline(rt, rnd) == fls.sim.duration_s
 
 
 # ---- the paper's headline ordering ----------------------------------------
