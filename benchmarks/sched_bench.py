@@ -37,6 +37,17 @@ inverts) as channels get scarce, which the infinite-parallelism model
 could never show.  ``--ps-channels`` additionally applies a channel
 count to the four MAIN policy rows.
 
+The **fault sweep** (on by default, ``--skip-fault-sweep`` to disable)
+re-runs the AsyncFLEO row under injected faults (DESIGN.md §10): every
+transfer-dropout probability in {0, 5%, 20%} crossed with a per-sat
+compute-rate spread in {0, 1.0} and a staleness function in
+{eq13, poly} — 12 cells, each carrying the retry telemetry
+(transfers failed / retried / dropped after max retries) and the
+realized compute-rate spread.  Under ``--fail-if-not-lower`` the
+all-off cell (dropout 0, spread 0, eq13; ``fault_model=None``) must
+match the main async row EXACTLY (the §10 off-switch parity pin), and
+every dropout=20% cell must still reach the target accuracy.
+
 ``--cnn-sats 200`` appends the accuracy-aware convergence-delay study:
 the async / pipelined / sync head-to-head re-run with REAL federated CNN
 training (non-IID class-conditional shards) at S >= 200, where the
@@ -84,6 +95,15 @@ POLICY_ROWS = (
 CONTENTION_ROWS = POLICY_ROWS[:3]
 CONTENTION_RATES = (16e6, 3e3)
 CONTENTION_CHANNELS = (1, 4, None)         # None = infinite parallelism
+
+# the robustness sweep (DESIGN.md §10): AsyncFLEO under injected faults.
+# dropout x compute-rate spread x staleness function; the all-off cell
+# (0, 0, eq13) runs with fault_model=None and must match the main async
+# row EXACTLY — that equality is the off-switch parity pin the
+# --fail-if-not-lower gate enforces
+FAULT_DROPOUTS = (0.0, 0.05, 0.2)
+FAULT_SPREADS = (0.0, 1.0)
+FAULT_STALENESS = ("eq13", "poly")
 
 
 def make_model(key_seed: int = 0, width: int = 64):
@@ -146,13 +166,16 @@ class MeanDistanceEvaluator:
 def bench_policy(name: str, strategy: str, w0, target: float,
                  max_epochs: int, duration_s: float,
                  ps_channels: Optional[int] = None,
-                 link: Optional[LinkModel] = None) -> Dict:
+                 link: Optional[LinkModel] = None,
+                 fault=None, staleness_fn: str = "eq13") -> Dict:
     spec = get_strategy(strategy)
     if ps_channels is not None:
         spec = dataclasses.replace(spec, ps_channels=ps_channels)
+    if staleness_fn != "eq13":
+        spec = dataclasses.replace(spec, staleness_fn=staleness_fn)
     sim = SimConfig(duration_s=duration_s, dt_s=30.0, train_time_s=300.0,
                     use_model_bank=True, use_fused_step=True,
-                    event_driven=True, link=link)
+                    event_driven=True, link=link, fault_model=fault)
     fls = FLSimulation(spec, ConvergingTrainer(w0),
                        MeanDistanceEvaluator(), sim)
     rt = EventDrivenRuntime(fls)
@@ -178,6 +201,22 @@ def bench_policy(name: str, strategy: str, w0, target: float,
         "ps_channels": ps_channels,
         "rate_bps": float((link or LinkModel()).rate_bps),
         "contention": rt.contention_stats(),
+        "staleness_fn": staleness_fn,
+        # fault/heterogeneity config + realized compute spread; the retry
+        # telemetry (transfers_failed / transfer_retries / dropped_*) is
+        # in sched_stats above
+        "fault": None if fault is None else {
+            "loss_prob": fault.loss_prob,
+            "max_retries": fault.max_retries,
+            "retry_backoff_s": fault.retry_backoff_s,
+            "compute_rate_spread": fault.compute_rate_spread,
+            "eclipse_fraction": fault.eclipse_fraction,
+            "seed": fault.seed,
+            "train_scale_min": (1.0 if fls._train_scale is None
+                                else float(fls._train_scale.min())),
+            "train_scale_max": (1.0 if fls._train_scale is None
+                                else float(fls._train_scale.max())),
+        },
         "wall_s": wall,
         "plan": fls.plan.summary(),
     }
@@ -212,6 +251,40 @@ def contention_sweep(w0, target: float, max_epochs: int,
             cells.append(cell)
     return {"rates_bps": [float(r) for r in CONTENTION_RATES],
             "channels": list(CONTENTION_CHANNELS), "cells": cells}
+
+
+def fault_sweep(w0, target: float, max_epochs: int, duration_s: float,
+                ps_channels: Optional[int] = None) -> Dict:
+    """AsyncFLEO convergence delay under injected faults: every dropout
+    probability crossed with a compute-rate spread and a staleness
+    function (12 cells).  Lossy cells retry with exponential backoff
+    (max_retries=3, 120 s base), so moderate dropout costs delay rather
+    than updates; the telemetry in each row's ``sched_stats`` records
+    how many transfers failed / retried / dropped."""
+    from repro.sched import FaultModel
+    cells = []
+    for drop in FAULT_DROPOUTS:
+        for spread in FAULT_SPREADS:
+            for sfn in FAULT_STALENESS:
+                off = drop == 0.0 and spread == 0.0
+                fm = None if off else FaultModel(
+                    loss_prob=drop, compute_rate_spread=spread)
+                r = bench_policy("async_asyncfleo", "asyncfleo-gs", w0,
+                                 target, max_epochs, duration_s,
+                                 ps_channels=ps_channels, fault=fm,
+                                 staleness_fn=sfn)
+                cell = {"dropout": drop, "compute_rate_spread": spread,
+                        "staleness_fn": sfn, "row": r}
+                st = r["sched_stats"]
+                print(f"[fault drop={drop:4.2f} spread={spread:3.1f} "
+                      f"{sfn:8s}] conv {_h(r['convergence_delay_s'])} h  "
+                      f"failed {st['transfers_failed']:3d}  "
+                      f"retried {st['transfer_retries']:3d}  "
+                      f"dropped {st['dropped_after_max_retries']:3d}")
+                cells.append(cell)
+    return {"dropouts": list(FAULT_DROPOUTS),
+            "compute_rate_spreads": list(FAULT_SPREADS),
+            "staleness_fns": list(FAULT_STALENESS), "cells": cells}
 
 
 def _h(delay_s) -> str:
@@ -308,6 +381,9 @@ def main():
     ap.add_argument("--skip-contention-sweep", action="store_true",
                     help="skip the (rate_bps x ps_channels) contention "
                          "sweep cells")
+    ap.add_argument("--skip-fault-sweep", action="store_true",
+                    help="skip the (dropout x compute spread x staleness "
+                         "fn) robustness sweep cells")
     ap.add_argument("--cnn-sats", type=int, default=0,
                     help="also run the accuracy-aware CNN study at this "
                          "constellation size (>= 200 for the ROADMAP item; "
@@ -353,6 +429,11 @@ def main():
         report["contention_sweep"] = contention_sweep(
             w0, args.target, args.max_epochs, args.days * 86400.0)
 
+    if not args.skip_fault_sweep:
+        report["fault_sweep"] = fault_sweep(
+            w0, args.target, args.max_epochs, args.days * 86400.0,
+            ps_channels=main_channels)
+
     if args.cnn_sats:
         report["cnn_study"] = cnn_study(args.cnn_sats, args.cnn_target,
                                         args.cnn_max_epochs,
@@ -386,6 +467,32 @@ def main():
                     f"contended async convergence delay ({ac}) not "
                     f"strictly lower than contended sync ({sc}) at "
                     f"ps_channels=1, rate={min(CONTENTION_RATES)} bps")
+        if not args.skip_fault_sweep:
+            # off-switch parity pin (DESIGN.md §10): the all-off fault
+            # cell must reproduce the main async row EXACTLY — the fault
+            # layer with fault_model=None is bit-identical to not having
+            # the layer at all
+            null = next(c["row"] for c in report["fault_sweep"]["cells"]
+                        if c["dropout"] == 0.0
+                        and c["compute_rate_spread"] == 0.0
+                        and c["staleness_fn"] == "eq13")
+            ref = by_name["async_asyncfleo"]
+            keys = ("convergence_delay_s", "epochs_to_target",
+                    "final_accuracy", "aggregations", "fused_dispatches")
+            drift = [k for k in keys if null[k] != ref[k]]
+            if drift:
+                raise SystemExit(
+                    f"fault off-switch parity broken: null fault cell "
+                    f"differs from the main async row on {drift}")
+            # and the robustness claim: async still converges with one
+            # transfer in five dropped (retry/backoff absorbs the loss)
+            bad = [c for c in report["fault_sweep"]["cells"]
+                   if c["dropout"] == max(FAULT_DROPOUTS)
+                   and c["row"]["convergence_delay_s"] is None]
+            if bad:
+                raise SystemExit(
+                    f"{len(bad)} dropout={max(FAULT_DROPOUTS)} fault "
+                    f"cells failed to reach the target accuracy")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,19 @@ the contact-plan handoff built in):
 
     PYTHONPATH=src python examples/fl_constellation_sim.py \
         --schemes asyncfleo-pipelined asyncfleo-gs --event-driven
+
+The fault / heterogeneity flags (DESIGN.md §10) inject failures into
+every scheme: ``--dropout`` makes each uplink transfer fail with that
+probability (retried with exponential backoff; forces --event-driven),
+``--compute-spread`` stretches each satellite's training time by a
+seeded per-sat multiplier in [1, 1+spread], ``--eclipse-fraction``
+blacks out each satellite for that fraction of a phase-shifted orbital
+period, and ``--staleness-fn`` swaps eq. 13's staleness discount for a
+FedAsync-family alternative:
+
+    PYTHONPATH=src python examples/fl_constellation_sim.py \
+        --schemes asyncfleo-gs fedisl --event-driven \
+        --dropout 0.2 --compute-spread 1.0 --staleness-fn poly
 """
 import argparse
 import dataclasses
@@ -57,9 +70,31 @@ def main():
                          "in flight, DESIGN.md §8); 0 keeps each "
                          "strategy's own setting, >1 implies "
                          "--event-driven")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="per-transfer loss probability (retried with "
+                         "exponential backoff, DESIGN.md §10); >0 implies "
+                         "--event-driven")
+    ap.add_argument("--compute-spread", type=float, default=0.0,
+                    help="per-sat compute heterogeneity: training time "
+                         "stretched by a seeded multiplier in "
+                         "[1, 1+spread]")
+    ap.add_argument("--eclipse-fraction", type=float, default=0.0,
+                    help="fraction of each (phase-shifted) orbital period "
+                         "a satellite is unavailable")
+    ap.add_argument("--staleness-fn", default="eq13",
+                    choices=["eq13", "constant", "hinge", "poly"],
+                    help="staleness discount: the paper's eq. 13 or a "
+                         "FedAsync-family alternative")
     args = ap.parse_args()
-    if args.max_in_flight > 1:
+    if args.max_in_flight > 1 or args.dropout > 0.0:
         args.event_driven = True
+
+    fault = None
+    if args.dropout or args.compute_spread or args.eclipse_fraction:
+        from repro.sched import FaultModel
+        fault = FaultModel(loss_prob=args.dropout,
+                           compute_rate_spread=args.compute_spread,
+                           eclipse_fraction=args.eclipse_fraction)
 
     cfg = dataclasses.replace(MNIST_CNN, conv_channels=(8, 16))
     const = paper_constellation()
@@ -78,15 +113,30 @@ def main():
         if args.max_in_flight:
             spec = dataclasses.replace(spec,
                                        max_in_flight=args.max_in_flight)
+        if args.staleness_fn != "eq13":
+            spec = dataclasses.replace(spec,
+                                       staleness_fn=args.staleness_fn)
         sim = FLSimulation(spec, pool, ev,
                            SimConfig(duration_s=args.days * 86400.0,
-                                     event_driven=args.event_driven))
+                                     event_driven=args.event_driven,
+                                     fault_model=fault))
         if args.event_driven:
             s = sim.plan.summary()
             print(f"# {name}: contact plan — {s['num_windows']} windows, "
                   f"coverage {s['coverage_fraction']:.3f}, "
                   f"mean window {s['mean_window_s']:.0f}s")
-        hist = sim.run(w0, max_epochs=args.epochs)
+        if args.event_driven and fault is not None:
+            # drive the runtime directly so the retry telemetry is visible
+            from repro.sched import EventDrivenRuntime
+            rt = EventDrivenRuntime(sim)
+            hist = rt.run(w0, max_epochs=args.epochs)
+            st = rt.stats
+            print(f"# {name}: faults — transfers failed "
+                  f"{st['transfers_failed']}, retried "
+                  f"{st['transfer_retries']}, dropped "
+                  f"{st['dropped_after_max_retries'] + st['dropped_unreachable']}")
+        else:
+            hist = sim.run(w0, max_epochs=args.epochs)
         for r in hist:
             print(f"{name},{r.epoch},{r.time_s/3600:.3f},{r.accuracy:.4f},"
                   f"{r.num_models},{r.gamma:.3f}")

@@ -200,13 +200,51 @@ def staleness_gamma(metas: Sequence[SatelliteMeta], total_data: float,
     return float(np.clip(g, 0.0, 1.0))
 
 
+# ---- staleness-function zoo (DESIGN.md §10) ---------------------------------
+# The paper pins eq. 13's discount k_n/beta; FedGSM motivates sweeping
+# alternatives, so the FedAsync family (SNIPPETS.md §1, FLGo defaults) is
+# selectable per strategy via StrategySpec.staleness_fn.  All but "eq13"
+# discount by the staleness *gap* delta = beta - k_n.
+STALENESS_FNS = ("eq13", "constant", "hinge", "poly")
+HINGE_A = 10.0      # FLGo fedasync defaults
+HINGE_B = 6.0
+POLY_A = 0.5
+
+
+def staleness_factor(fn: str, beta: int, epoch: int) -> float:
+    """Multiplicative staleness discount in (0, 1] for a model last
+    aggregated at global epoch ``epoch``, joining at epoch ``beta``.
+
+    * ``eq13``     — k_n / beta (the paper's discount; 0 for never-joined)
+    * ``constant`` — 1 (FedAsync a-lin: no mitigation)
+    * ``hinge``    — 1 while delta <= b, then 1 / (a * (delta - b))
+    * ``poly``     — (1 + delta) ** -a
+    """
+    if fn == "eq13":
+        return max(epoch, 0) / max(beta, 1)
+    delta = max(beta - epoch, 0)
+    if fn == "constant":
+        return 1.0
+    if fn == "hinge":
+        return 1.0 if delta <= HINGE_B else 1.0 / (HINGE_A * (delta - HINGE_B))
+    if fn == "poly":
+        return float((1.0 + delta) ** (-POLY_A))
+    raise ValueError(f"unknown staleness_fn {fn!r}; available: "
+                     f"{STALENESS_FNS}")
+
+
 def asyncfleo_weights(groups: Dict[int, List[int]],
                       metas: List[SatelliteMeta], beta: int, *,
                       strict_paper_eq14: bool = False,
-                      min_gamma: float = 0.1):
+                      min_gamma: float = 0.1,
+                      staleness_fn: str = "eq13"):
     """Algorithm 2 selection + eq. 13/14 weight vector — pure host metadata
     math, no tensors.  Returns (selected indices, per-selected weights,
-    gamma, info); selected is empty when nothing qualifies."""
+    gamma, info); selected is empty when nothing qualifies.
+
+    ``staleness_fn`` swaps eq. 13's k_n/beta discount for one of the
+    FedAsync family (:func:`staleness_factor`); "eq13" (the default)
+    keeps the paper's exact arithmetic, byte for byte."""
     selected: List[int] = []
     stale_only_groups = 0
     for gi, idxs in groups.items():
@@ -226,11 +264,23 @@ def asyncfleo_weights(groups: Dict[int, List[int]],
     if all_fresh:
         gamma = 1.0                          # pure data-weighted FedAvg step
         raw = np.array([m.size for m in sel_metas], np.float64)
-    else:
+    elif staleness_fn == "eq13":
         gamma = max(staleness_gamma(sel_metas, total_data, beta), min_gamma)
         raw = np.array([m.size * (max(m.epoch, 0) / max(beta, 1) if not m.is_fresh(beta) else 1.0)
                         for m in sel_metas], np.float64)
         if raw.sum() <= 0.0:                 # all k_n == 0: size-weight instead
+            raw = np.array([m.size for m in sel_metas], np.float64)
+    else:
+        # zoo discount: gamma is the size-weighted mean of the per-model
+        # factors (the eq. 13 shape with s(delta) in place of k_n/beta),
+        # clipped to [min_gamma, 1]; stale models weight by size * s(delta)
+        phi = [staleness_factor(staleness_fn, beta, m.epoch)
+               for m in sel_metas]
+        g = sum((m.size / total_data) * p for m, p in zip(sel_metas, phi))
+        gamma = float(np.clip(g, min_gamma, 1.0))
+        raw = np.array([m.size * (p if not m.is_fresh(beta) else 1.0)
+                        for m, p in zip(sel_metas, phi)], np.float64)
+        if raw.sum() <= 0.0:
             raw = np.array([m.size for m in sel_metas], np.float64)
 
     if strict_paper_eq14:
@@ -244,7 +294,8 @@ def asyncfleo_weights(groups: Dict[int, List[int]],
 
 def epoch_weight_vector(agg_mode: str, metas: List[SatelliteMeta],
                         beta: int, groups: Optional[Dict[int, List[int]]],
-                        *, strict_paper_eq14: bool = False):
+                        *, strict_paper_eq14: bool = False,
+                        staleness_fn: str = "eq13"):
     """Per-model weight vector + base weight for one epoch's update —
     pure host metadata math shared by the stacked and fused simulator
     paths (the fused epoch program takes the result as an input,
@@ -282,7 +333,8 @@ def epoch_weight_vector(agg_mode: str, metas: List[SatelliteMeta],
         info["gamma"] = gam
         return gam * raw / raw.sum(), 1.0 - gam, info
     selected, wsel, gamma, info = asyncfleo_weights(
-        groups, metas, beta, strict_paper_eq14=strict_paper_eq14)
+        groups, metas, beta, strict_paper_eq14=strict_paper_eq14,
+        staleness_fn=staleness_fn)
     ws = np.zeros(n_meta)
     if selected:
         ws[selected] = wsel
@@ -294,6 +346,7 @@ def asyncfleo_aggregate(w_prev, groups: Dict[int, List[int]], models,
                         metas: List[SatelliteMeta], beta: int, *,
                         strict_paper_eq14: bool = False,
                         min_gamma: float = 0.1,
+                        staleness_fn: str = "eq13",
                         use_kernel: bool = False):
     """Algorithm 2 lines 12-17.
 
@@ -307,7 +360,7 @@ def asyncfleo_aggregate(w_prev, groups: Dict[int, List[int]], models,
     stacked = isinstance(models, ModelBank)
     selected, weights, gamma, info = asyncfleo_weights(
         groups, metas, beta, strict_paper_eq14=strict_paper_eq14,
-        min_gamma=min_gamma)
+        min_gamma=min_gamma, staleness_fn=staleness_fn)
     if not selected:
         return w_prev, info
 

@@ -253,9 +253,18 @@ class PropagationModel:
                                                      t_at[m])
         return out, hap
 
-    def uplink(self, sat: int, t_done: float, bits: float,
-               sink: int) -> Tuple[float, int]:
+    def uplink(self, sat: int, t_done: float, bits: float, sink: int,
+               contention=None) -> Tuple[float, int]:
         """Arrival time of sat's local model at the *sink* HAP, and the HAP
-        that first received it (scalar convenience over ``uplink_many``)."""
-        t_arr, haps = self.uplink_many([sat], [t_done], bits, sink)
+        that first received it (scalar convenience over ``uplink_many``;
+        this single-transfer shape is what the event runtime's
+        lossy-transfer retries re-time — each retransmission is a fresh
+        uplink, and a fresh rx grant when ``contention`` is given).
+
+        The fault layer (sched/faults.py) never appears here explicitly:
+        eclipse windows are ANDed into the visibility grid before the
+        plan compiles, so all uplink routing (direct / relay / wait)
+        already avoids dark satellites."""
+        t_arr, haps = self.uplink_many([sat], [t_done], bits, sink,
+                                       contention=contention)
         return float(t_arr[0]), int(haps[0])

@@ -74,6 +74,12 @@ class SimConfig:
     use_fused_step: bool = True        # one donated program/epoch (DESIGN §6)
     mesh: Optional[object] = None      # jax Mesh with a "data" axis, or None
     event_driven: bool = False         # run() delegates to sched.runtime
+    # pluggable fault/heterogeneity layer (sched/faults.FaultModel,
+    # DESIGN.md §10): per-sat compute-rate multipliers, eclipse
+    # availability windows, lossy sat->PS transfers with bounded
+    # retry/backoff.  None attaches NO fault state at all — bit-identical
+    # to the fault-free simulator (the parity contract)
+    fault_model: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -118,6 +124,20 @@ class FLSimulation:
         self.nodes = make_ps_nodes(spec.ps_scenario)
         self.timeline = VisibilityTimeline(self.constellation, self.nodes,
                                            sim.duration_s, sim.dt_s)
+        # fault/heterogeneity layer (DESIGN.md §10): eclipse windows mask
+        # the visibility grid BEFORE anything derives state from it, so
+        # contact windows, downlink stars, relay seeds and uplinks all
+        # route around dark satellites with no special cases; the per-sat
+        # training-time scale is applied in _train_times (None = scalar
+        # math, bit-identical to the fault-free path)
+        self.fault = getattr(sim, "fault_model", None)
+        self._train_scale = None
+        if self.fault is not None:
+            S = self.constellation.num_sats
+            self._train_scale = self.fault.train_time_scale(S)
+            mask = self.fault.availability_mask(self.timeline.times, S)
+            if mask is not None:
+                self.timeline.grid &= mask[:, :, None]
         self.topo = RingOfStars(self.constellation, self.nodes, self.timeline)
         self.prop = PropagationModel(self.topo, sim.link or LinkModel())
         # the compiled contact plan owns the downlink/uplink timing rules
@@ -174,6 +194,17 @@ class FLSimulation:
     def _uplink_many(self, sats, t_done, bits: float, sink: int):
         return self.plan.uplink_times(sats, t_done, bits, sink)
 
+    def _train_times(self, participants):
+        """Per-participant local-training durations.  Homogeneous fleets
+        get the scalar ``train_time_s`` (bit-identical to the fault-free
+        arithmetic); under a FaultModel compute-rate spread each
+        satellite's duration is stretched by its multiplier, which is how
+        heterogeneity reaches every TRAIN_DONE instant of both drivers."""
+        if self._train_scale is None:
+            return self.sim.train_time_s
+        return (self.sim.train_time_s
+                * self._train_scale[np.asarray(participants, np.int64)])
+
     def _combine(self, segments, weights, base_flat, base_weight: float):
         """Map metas-indexed ``weights`` onto per-segment weight vectors and
         run the fused stacked combination (host bookkeeping + one
@@ -214,7 +245,8 @@ class FLSimulation:
         (:func:`repro.core.aggregation.epoch_weight_vector`)."""
         return agg.epoch_weight_vector(
             self.spec.agg_mode, metas, beta, groups,
-            strict_paper_eq14=self.spec.strict_paper_eq14)
+            strict_paper_eq14=self.spec.strict_paper_eq14,
+            staleness_fn=getattr(self.spec, "staleness_fn", "eq13"))
 
     @staticmethod
     def _blocked_layout(new_orbits, orbit_indices, bank_rows, n_rows: int,
@@ -285,7 +317,7 @@ class FLSimulation:
         parity contract (tests/test_sched.py) depends on identical
         timing math, so neither may fork this."""
         ids_np, _n = pad_bucket_ids(participants)
-        t_done = recv[participants] + self.sim.train_time_s
+        t_done = recv[participants] + self._train_times(participants)
         t_arr, _haps = self._uplink_many(participants, t_done, bits, sink)
         arrivals = [(float(t_arr[k]), s, k)
                     for k, s in enumerate(participants)
@@ -537,7 +569,7 @@ class FLSimulation:
                     participants, w_tree, seed=sim.seed * 1000 + beta)
                 self._spec = bank.spec
             with self._seg("timing"):
-                t_done = recv[participants] + sim.train_time_s
+                t_done = recv[participants] + self._train_times(participants)
                 t_arr_vec, _haps = self._uplink_many(participants, t_done,
                                                      bits, sink)
             arrivals = [(float(t_arr_vec[k]), s, k)
@@ -637,7 +669,7 @@ class FLSimulation:
                 trained, _losses = self.trainer.train_many(
                     participants, w_tree, seed=sim.seed * 1000 + beta)
             with self._seg("timing"):
-                t_done = recv[participants] + sim.train_time_s
+                t_done = recv[participants] + self._train_times(participants)
                 t_arr_vec, _haps = self._uplink_many(participants, t_done,
                                                      bits, sink)
             arrivals = [(float(t_arr_vec[k]), s, p)
@@ -760,6 +792,11 @@ class FLSimulation:
             from repro.sched.runtime import EventDrivenRuntime
             return EventDrivenRuntime(self).run(
                 w0, max_epochs, target_accuracy=target_accuracy)
+        if self.fault is not None and self.fault.loss_prob > 0.0:
+            raise ValueError(
+                "FaultModel.loss_prob > 0 requires the event-driven runtime "
+                "(SimConfig.event_driven=True): the epoch loop cannot "
+                "express TRANSFER_FAILED retry chains")
         bits, fused, stacked = self._init_run(w0)
         w_tree = w0                       # pytree view (trainer/evaluator)
         t = 0.0

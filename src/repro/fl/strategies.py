@@ -26,6 +26,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+# mirror of repro.core.aggregation.STALENESS_FNS (kept literal here so this
+# module stays import-light; test_faults pins the two in sync)
+_STALENESS_FNS = ("eq13", "constant", "hinge", "poly")
+_AGG_MODES = ("asyncfleo", "fedavg", "per_arrival", "interval")
+
 
 @dataclasses.dataclass(frozen=True)
 class StrategySpec:
@@ -62,6 +67,60 @@ class StrategySpec:
     # state at all, bit-identical to the pre-contention semantics (the
     # parity default)
     ps_channels: Optional[int] = None
+    # staleness-mitigation function for the asyncfleo aggregation mode
+    # (core/aggregation.staleness_factor): "eq13" is the paper's k_n/beta
+    # discount; "constant" / "hinge" / "poly" are the FedAsync family
+    # (SNIPPETS.md §1) over the staleness gap beta - k_n
+    staleness_fn: str = "eq13"
+    # contention-aware trigger windows (DESIGN.md §10): when set, the
+    # AsyncFLEO policy multiplies an idle window by
+    # rx_backlog_window_scale whenever the sink PS's pending rx-channel
+    # backlog exceeds this many channel-seconds at window-open time — a
+    # congested sink commits sooner instead of waiting for arrivals that
+    # are stuck in the queue anyway.  None (default) = off, windows
+    # bit-identical to the uncontended trigger logic
+    rx_backlog_threshold_s: Optional[float] = None
+    rx_backlog_window_scale: float = 0.5
+
+    def __post_init__(self):
+        """Fail fast on malformed specs — a bad channel count or timeout
+        table used to surface as an opaque IndexError deep in the
+        runtime."""
+        if self.agg_mode not in _AGG_MODES:
+            raise ValueError(f"StrategySpec.agg_mode must be one of "
+                             f"{_AGG_MODES}, got {self.agg_mode!r}")
+        if self.staleness_fn not in _STALENESS_FNS:
+            raise ValueError(f"StrategySpec.staleness_fn must be one of "
+                             f"{_STALENESS_FNS}, got {self.staleness_fn!r}")
+        if self.interval_s <= 0.0:
+            raise ValueError(f"StrategySpec.interval_s must be > 0, "
+                             f"got {self.interval_s}")
+        if int(self.num_groups) < 1:
+            raise ValueError(f"StrategySpec.num_groups must be >= 1, "
+                             f"got {self.num_groups}")
+        if int(self.max_in_flight) < 1:
+            raise ValueError(f"StrategySpec.max_in_flight must be >= 1, "
+                             f"got {self.max_in_flight}")
+        if self.ps_channels is not None and int(self.ps_channels) < 1:
+            raise ValueError(f"StrategySpec.ps_channels must be >= 1 or "
+                             f"None (infinite), got {self.ps_channels}")
+        for pair in self.group_timeouts:
+            try:
+                ok = (len(pair) == 2 and float(pair[0]) == int(pair[0])
+                      and float(pair[1]) > 0.0)
+            except (TypeError, ValueError):
+                ok = False
+            if not ok:
+                raise ValueError(
+                    "StrategySpec.group_timeouts must be (group_id, "
+                    f"window_s > 0) pairs, got {self.group_timeouts!r}")
+        if (self.rx_backlog_threshold_s is not None
+                and self.rx_backlog_threshold_s < 0.0):
+            raise ValueError(f"StrategySpec.rx_backlog_threshold_s must be "
+                             f">= 0 or None, got {self.rx_backlog_threshold_s}")
+        if not 0.0 < self.rx_backlog_window_scale <= 1.0:
+            raise ValueError(f"StrategySpec.rx_backlog_window_scale must be "
+                             f"in (0, 1], got {self.rx_backlog_window_scale}")
 
 
 STRATEGIES = {

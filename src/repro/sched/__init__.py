@@ -5,10 +5,13 @@
 # FedAsync, with optional per-divergence-group deadlines), sink
 # handoff policies (ring role swap / contact-plan next-contact), and
 # finite per-PS link capacity (ContentionModel: StrategySpec.ps_channels
-# parallel tx/rx channels per PS, FIFO grants, cross-round serialization).
+# parallel tx/rx channels per PS, FIFO grants, cross-round serialization),
+# plus a pluggable fault/heterogeneity layer (FaultModel: per-sat compute
+# rates, eclipse availability, lossy transfers with bounded retry/backoff).
 from repro.sched.contacts import (ChannelPool, ContactPlan, ContactWindow,
                                   ContentionModel)
 from repro.sched.events import Event, EventKind, EventQueue
+from repro.sched.faults import FaultModel
 from repro.sched.policies import (AsyncFLEOPolicy, FedAsyncPolicy,
                                   HANDOFF_POLICIES, NextContactHandoff,
                                   POLICIES, RingHandoff, SyncBarrierPolicy,
@@ -16,7 +19,7 @@ from repro.sched.policies import (AsyncFLEOPolicy, FedAsyncPolicy,
 from repro.sched.runtime import EventDrivenRuntime, RoundState
 
 __all__ = ["ChannelPool", "ContactPlan", "ContactWindow", "ContentionModel",
-           "Event", "EventKind",
+           "Event", "EventKind", "FaultModel",
            "EventQueue", "AsyncFLEOPolicy", "SyncBarrierPolicy",
            "FedAsyncPolicy", "POLICIES", "make_policy",
            "RingHandoff", "NextContactHandoff", "HANDOFF_POLICIES",

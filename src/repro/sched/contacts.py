@@ -131,9 +131,17 @@ class ChannelPool:
 
     def backlog(self, ps: int, t: float) -> float:
         """Total reserved channel-seconds still pending at ``ps`` after
-        ``t`` — the occupancy signal handoff policies tie-break on."""
+        ``t`` — the occupancy signal handoff policies tie-break on (and
+        the contention-aware trigger windows threshold on, §10)."""
         return float(sum(max(0.0, e - max(s, t))
                          for iv in self.res[ps] for (s, e) in iv))
+
+    def intervals(self, ps: int) -> List[Tuple[int, float, float]]:
+        """All (channel, start, end) reservations at ``ps`` — invariant
+        checks (the no-double-reserve property in tests/test_property.py)
+        and debugging; not on the hot path."""
+        return [(c, s, e) for c, iv in enumerate(self.res[ps])
+                for (s, e) in iv]
 
     def stats(self, horizon_s: float) -> Dict:
         cap = self.channels if self.channels is not None else 1
@@ -210,6 +218,13 @@ class ContentionModel:
         self.rx = ChannelPool(self.num_ps, self.channels)
 
     def snapshot(self):
+        """Deep copy of both pools.  Rollback points for actions whose
+        grants may turn out infeasible: aborted speculative round opens
+        (DESIGN.md §8) and lossy-transfer retries whose retransmission
+        can never complete (§10) restore through this, so a transfer that
+        never happens leaves no channel occupancy.  A snapshot is
+        reusable — ``restore`` copies it again, so the same rollback
+        point can unwind several divergent continuations."""
         return copy.deepcopy((self.tx, self.rx))
 
     def restore(self, snap) -> None:

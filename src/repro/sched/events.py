@@ -1,6 +1,6 @@
 """Discrete-event primitives for the async FL runtime (DESIGN.md §7-§8).
 
-Four event kinds drive a federated round (FLGo's ``system_simulator``
+Five event kinds drive a federated round (FLGo's ``system_simulator``
 separates virtual-clock state the same way):
 
 * ``TRAIN_DONE``     — a satellite finished its J local iterations;
@@ -12,7 +12,13 @@ separates virtual-clock state the same way):
 * ``SINK_HANDOFF``   — open the next round.  Pushed when a round closes
   (PS roles swap, §IV-B3) and, in pipelined mode, *speculatively* while
   a round is still in flight (``pipelined=True``) so up to
-  ``max_in_flight`` rounds overlap (DESIGN.md §8).
+  ``max_in_flight`` rounds overlap (DESIGN.md §8);
+* ``TRANSFER_FAILED``— a sat->PS model transfer was lost in flight
+  (FaultModel Bernoulli draw, DESIGN.md §10).  Fires at the would-be
+  arrival instant; the handler re-times the retransmission with
+  exponential backoff through the contact plan (a fresh rx-channel
+  grant) up to ``FaultModel.max_retries`` attempts, then drops the
+  update.  ``attempt`` counts the failures so far in the chain.
 
 Every event carries the ``round_idx`` it is addressed to, so with
 several rounds in flight a ``MODEL_ARRIVAL`` always commits into the
@@ -38,6 +44,7 @@ class EventKind(enum.IntEnum):
     MODEL_ARRIVAL = 1
     TRIGGER_TIMEOUT = 2
     SINK_HANDOFF = 3
+    TRANSFER_FAILED = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +61,9 @@ class Event:
     sat: int = -1
     row: int = -1
     pipelined: bool = False
+    # failed attempts so far in a lossy-transfer retry chain: attempt=k
+    # on MODEL_ARRIVAL / TRANSFER_FAILED means this is retransmission k
+    attempt: int = 0
 
     def __post_init__(self):
         assert self.time == self.time, "event time must not be NaN"

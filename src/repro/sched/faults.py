@@ -1,0 +1,166 @@
+"""Pluggable fault-injection / heterogeneity layer (DESIGN.md §10).
+
+The simulator's robustness story used to ride on geometry alone: every
+satellite trained at the same speed, no transfer was ever lost, and no
+satellite ever powered down.  ``FaultModel`` makes the three missing
+failure axes first-class, following FLGo's ``system_simulator`` shape
+(pluggable availability / latency / dropout state on a shared clock):
+
+* **compute-rate heterogeneity** — per-satellite multipliers that
+  stretch local-training time (and therefore every ``TRAIN_DONE``
+  instant): ``train_time_scale`` draws a seeded spread in
+  ``[1, 1 + compute_rate_spread]`` (or takes explicit per-sat rates).
+  Threaded through `FLSimulation._train_times`, the ONE shared timing
+  helper of the epoch loop and the event runtime, so driver parity is
+  preserved under heterogeneity.
+* **eclipse / duty-cycle availability** — ``availability_mask`` returns
+  a (T, S) boolean that is ANDed into ``VisibilityTimeline.grid`` at
+  simulator construction: a satellite in its (seeded-phase, periodic)
+  eclipse window is simply not visible to any PS, so every downstream
+  rule — contact windows, downlink stars, ISL relay seeds, uplink
+  direct/relay/wait — routes around it without special cases.
+* **lossy transfers** — ``transfer_fails`` is a *deterministic* seeded
+  Bernoulli draw per (satellite, round, attempt): the event runtime
+  turns a failed sat->PS model transfer into a ``TRANSFER_FAILED``
+  event at the would-be arrival instant and re-times the retransmission
+  from ``t + retry_backoff_s * 2**attempt`` through the contact plan
+  (which charges a fresh rx-channel grant — retries re-enter the
+  `ChannelPool`), up to ``max_retries`` attempts; grants of retries
+  that can never complete are rolled back via the existing
+  snapshot/restore machinery.  Loss requires the event runtime — the
+  epoch loop cannot express retries and refuses to run with
+  ``loss_prob > 0``.
+
+Every draw is a pure function of ``(seed, satellite, round, attempt)``
+— no global RNG state — so a fault schedule is reproducible across
+runs and independent of event-processing order.
+
+**Off-switch contract**: ``SimConfig.fault_model=None`` attaches no
+state at all, and a default ``FaultModel()`` (every axis off) takes the
+identical code paths — both are bit-identical to the fault-free
+simulator (tests/test_faults.py pins this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+# domain-separation tags so the three fault axes never share a stream
+_TAG_COMPUTE = 0xC0
+_TAG_ECLIPSE = 0xEC
+_TAG_LOSS = 0xF417
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Declarative fault / heterogeneity scenario (all axes off by
+    default; validated at construction).
+
+    ``compute_rate_spread=s`` draws per-sat training-time multipliers
+    uniformly in ``[1, 1+s]`` (0 = homogeneous); ``compute_rates``
+    overrides with explicit multipliers.  ``eclipse_fraction=f`` makes
+    each satellite unavailable for a fraction ``f`` of every
+    ``eclipse_period_s`` window (seeded per-sat phase).  ``loss_prob``
+    is the per-attempt Bernoulli loss of a sat->PS model transfer;
+    ``max_retries`` bounds retransmissions and ``retry_backoff_s`` is
+    the base of the exponential backoff (attempt k waits
+    ``retry_backoff_s * 2**k``)."""
+    seed: int = 0
+    # heterogeneity
+    compute_rate_spread: float = 0.0
+    compute_rates: Optional[Tuple[float, ...]] = None
+    # eclipse / duty cycle
+    eclipse_fraction: float = 0.0
+    eclipse_period_s: float = 5400.0
+    # lossy transfers
+    loss_prob: float = 0.0
+    max_retries: int = 3
+    retry_backoff_s: float = 120.0
+
+    def __post_init__(self):
+        if int(self.seed) < 0:
+            raise ValueError(f"FaultModel.seed must be >= 0, got {self.seed}")
+        if self.compute_rate_spread < 0.0:
+            raise ValueError("FaultModel.compute_rate_spread must be >= 0, "
+                             f"got {self.compute_rate_spread}")
+        if self.compute_rates is not None:
+            rates = tuple(float(r) for r in self.compute_rates)
+            if not rates or min(rates) <= 0.0:
+                raise ValueError("FaultModel.compute_rates must be a "
+                                 "non-empty tuple of positive multipliers, "
+                                 f"got {self.compute_rates!r}")
+            object.__setattr__(self, "compute_rates", rates)
+        if not 0.0 <= self.eclipse_fraction < 1.0:
+            raise ValueError("FaultModel.eclipse_fraction must be in "
+                             f"[0, 1), got {self.eclipse_fraction}")
+        if self.eclipse_period_s <= 0.0:
+            raise ValueError("FaultModel.eclipse_period_s must be > 0, "
+                             f"got {self.eclipse_period_s}")
+        if not 0.0 <= self.loss_prob <= 1.0:
+            raise ValueError("FaultModel.loss_prob must be in [0, 1], "
+                             f"got {self.loss_prob}")
+        if int(self.max_retries) < 0:
+            raise ValueError("FaultModel.max_retries must be >= 0, "
+                             f"got {self.max_retries}")
+        if self.retry_backoff_s <= 0.0:
+            raise ValueError("FaultModel.retry_backoff_s must be > 0, "
+                             f"got {self.retry_backoff_s}")
+
+    # ---- derived state (pure functions of the frozen config) ---------------
+
+    @property
+    def is_null(self) -> bool:
+        """True when every fault axis is off — a null model must be
+        bit-identical to ``fault_model=None`` (the off-switch contract)."""
+        return (self.compute_rate_spread == 0.0
+                and self.compute_rates is None
+                and self.eclipse_fraction == 0.0
+                and self.loss_prob == 0.0)
+
+    def train_time_scale(self, num_sats: int) -> Optional[np.ndarray]:
+        """Per-satellite training-time multipliers (>= 1 under a spread),
+        or None when homogeneous — callers then keep the scalar
+        ``train_time_s`` math, bit-identical to the fault-free path."""
+        if self.compute_rates is not None:
+            if len(self.compute_rates) < num_sats:
+                raise ValueError(
+                    f"FaultModel.compute_rates has {len(self.compute_rates)} "
+                    f"entries but the constellation has {num_sats} satellites")
+            return np.asarray(self.compute_rates[:num_sats], np.float64)
+        if self.compute_rate_spread <= 0.0:
+            return None
+        rng = np.random.default_rng((self.seed, _TAG_COMPUTE))
+        return 1.0 + self.compute_rate_spread * rng.random(num_sats)
+
+    def availability_mask(self, times: np.ndarray,
+                          num_sats: int) -> Optional[np.ndarray]:
+        """(T, S) bool — True where a satellite is powered/available.
+        None when eclipse modelling is off (no grid mutation at all).
+        Each satellite is dark for ``eclipse_fraction`` of every
+        ``eclipse_period_s`` window, at a seeded per-sat phase."""
+        if self.eclipse_fraction <= 0.0:
+            return None
+        rng = np.random.default_rng((self.seed, _TAG_ECLIPSE))
+        phase = rng.random(num_sats) * self.eclipse_period_s      # (S,)
+        dark = self.eclipse_fraction * self.eclipse_period_s
+        rel = (np.asarray(times, np.float64)[:, None] + phase[None, :]) \
+            % self.eclipse_period_s
+        return rel >= dark
+
+    def transfer_fails(self, sat: int, round_idx: int, attempt: int) -> bool:
+        """Deterministic Bernoulli draw for one transfer attempt.  Keyed
+        on (seed, sat, round, attempt) so the schedule is independent of
+        event-processing order and reproducible across runs."""
+        if self.loss_prob <= 0.0:
+            return False
+        if self.loss_prob >= 1.0:
+            return True
+        rng = np.random.default_rng(
+            (self.seed, _TAG_LOSS, int(sat), int(round_idx), int(attempt)))
+        return bool(rng.random() < self.loss_prob)
+
+    def retry_delay_s(self, attempt: int) -> float:
+        """Exponential backoff before retransmission ``attempt + 1``."""
+        return float(self.retry_backoff_s * (2.0 ** int(attempt)))

@@ -72,13 +72,37 @@ class AsyncFLEOPolicy:
     (DESIGN.md §8): the first arrival FROM EACH GROUP opens that group's
     window and the round commits at the earliest group deadline.  Empty
     (the default) keeps the single global window — bit-identical to the
-    epoch loop, which the parity tests pin."""
+    epoch loop, which the parity tests pin.
+
+    ``rx_backlog_threshold_s`` (from ``StrategySpec``, DESIGN.md §10)
+    makes the windows contention-aware: when the sink PS's pending
+    rx-channel backlog exceeds the threshold at window-open time, the
+    window is multiplied by ``rx_backlog_window_scale`` — a congested
+    sink commits sooner instead of idling for arrivals that are stuck in
+    the rx queue anyway.  None (the default) never scales and keeps the
+    ``split`` delegation to ``_trigger`` — bit-identical windows."""
     name: str = "asyncfleo"
     group_timeouts: Dict[int, float] = dataclasses.field(
         default_factory=dict)
+    rx_backlog_threshold_s: Optional[float] = None
+    rx_backlog_window_scale: float = 0.5
 
     def window_s(self, rt, group: int) -> float:
         return float(self.group_timeouts.get(group, rt.sim.agg_timeout_s))
+
+    def _scaled(self, rt, rnd, t: float, window: float) -> float:
+        """Contention-aware shrink of an idle window (no-op when the
+        threshold is off or the sink's rx pool is under it)."""
+        thr = self.rx_backlog_threshold_s
+        if thr is None:
+            return window
+        ctn = getattr(rt.plan, "contention", None)
+        if ctn is None or ctn.backlog("rx", rnd.sink, t) <= thr:
+            return window
+        stats = getattr(rt, "stats", None)
+        if stats is not None:
+            stats["shrunk_windows"] = stats.get("shrunk_windows", 0) + 1
+        return window * self.rx_backlog_window_scale
 
     def round_deadline(self, rt, rnd) -> Optional[float]:
         if rnd.expected:                 # first arrival opens the window
@@ -89,28 +113,42 @@ class AsyncFLEOPolicy:
                    ) -> Optional[float]:
         if not self.group_timeouts:
             if rnd.trigger_scheduled is None:
-                return min(t + rt.sim.agg_timeout_s, rt.sim.duration_s)
+                return min(t + self._scaled(rt, rnd, t, rt.sim.agg_timeout_s),
+                           rt.sim.duration_s)
             return None
         g = rt.group_of_sat(sat)
         if g in rnd.group_first:         # group window already open
             return None
         rnd.group_first[g] = t
-        return min(t + self.window_s(rt, g), rt.sim.duration_s)
+        return min(t + self._scaled(rt, rnd, t, self.window_s(rt, g)),
+                   rt.sim.duration_s)
 
     def split(self, rt, rnd, t_fired: float):
-        if not self.group_timeouts:
+        if not self.group_timeouts and self.rx_backlog_threshold_s is None:
             # delegate to the epoch loop's trigger: identical aggregation
             # instants (the parity contract)
             return rt.fls._trigger(rnd.expected, rnd.t_start)
-        # per-group mode: the earliest group deadline IS the aggregation
-        # instant; the min_models backstop is the SAME helper `_trigger`'s
-        # async branch uses, so the two can't drift (and tied arrivals at
-        # the backstop instant are carried, not dropped)
+        # per-group / contention-aware mode: the fired deadline IS the
+        # aggregation instant (with shrink active, `_trigger` would
+        # recompute the unshrunk window); the min_models backstop is the
+        # SAME helper `_trigger`'s async branch uses, so the two can't
+        # drift (and tied arrivals at the backstop instant are carried,
+        # not dropped)
         t_agg = min(t_fired, rt.sim.duration_s)
         return split_min_models(rnd.expected, t_agg, rt.sim.min_models)
 
     def round_complete(self, rnd) -> bool:
         return True
+
+    def on_expected_drop(self, rt, rnd, t: float) -> Optional[float]:
+        """A lossy transfer was dropped from ``rnd.expected`` after max
+        retries (DESIGN.md §10).  When nothing is left in flight and no
+        window is pending the round can never resolve on its own —
+        trigger now (a 0-model commit / carried-straggler drain) instead
+        of hanging until the event queue drains."""
+        if not rnd.expected and rnd.trigger_scheduled is None:
+            return t
+        return None
 
 
 @dataclasses.dataclass
@@ -141,6 +179,14 @@ class SyncBarrierPolicy:
     def round_complete(self, rnd) -> bool:
         return True
 
+    def on_expected_drop(self, rt, rnd, t: float) -> Optional[float]:
+        """A dropped transfer shrinks the barrier: when every *surviving*
+        expected model has already arrived the barrier is complete now —
+        fire instead of stalling until ``sync_stall_s``."""
+        if rnd.arrived_count >= len(rnd.expected):
+            return t
+        return None
+
 
 @dataclasses.dataclass
 class FedAsyncPolicy:
@@ -169,6 +215,14 @@ class FedAsyncPolicy:
 
     def round_complete(self, rnd) -> bool:
         return rnd.arrived_count >= len(rnd.expected)
+
+    def on_expected_drop(self, rt, rnd, t: float) -> Optional[float]:
+        """Same rescue as the AsyncFLEO window: an uncommitted round whose
+        every transfer was dropped must still resolve (``round_complete``
+        is re-checked by the runtime after the drop either way)."""
+        if not rnd.expected and rnd.trigger_scheduled is None:
+            return t
+        return None
 
 
 POLICIES = {
@@ -199,6 +253,11 @@ def make_policy(spec, name: str = ""):
     gt = dict(getattr(spec, "group_timeouts", ()) or ())
     if gt and isinstance(policy, AsyncFLEOPolicy):
         policy.group_timeouts = gt
+    if isinstance(policy, AsyncFLEOPolicy):
+        policy.rx_backlog_threshold_s = getattr(
+            spec, "rx_backlog_threshold_s", None)
+        policy.rx_backlog_window_scale = float(getattr(
+            spec, "rx_backlog_window_scale", 0.5))
     return policy
 
 

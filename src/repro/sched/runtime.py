@@ -53,6 +53,22 @@ exposes grants, queue-wait totals and per-PS utilization.
 ``ps_channels=None`` (default) attaches no model at all — bit-identical
 to the uncontended runtime.
 
+**Faults** (DESIGN.md §10): with ``SimConfig.fault_model`` set, each
+sat->PS model transfer draws a deterministic Bernoulli loss
+(`sched/faults.FaultModel.transfer_fails`, keyed on (seed, sat, round,
+attempt)).  A lost transfer fires TRANSFER_FAILED at its would-be
+arrival instant; the handler re-times the retransmission after an
+exponential backoff through the contact plan — a fresh rx-channel grant,
+so retries contend for the same finite ``ps_channels`` — and bounds the
+chain at ``max_retries`` before dropping the update entirely
+(``dropped_after_max_retries``).  A retry whose grant can never complete
+(unreachable sink / past the horizon) is rolled back through the same
+snapshot/restore machinery as aborted speculative opens.  Dropping
+shrinks the round's expected set, and the trigger policy's
+``on_expected_drop`` hook keeps barrier/window rounds from hanging on
+transfers that will never land.  ``fault_model=None`` (default) skips
+every check — bit-identical to the fault-free runtime.
+
 The runtime owns no model math: it drives `FLSimulation._fused_commit`
 (the epoch loop's post-trigger tail), so under the AsyncFLEO policy its
 aggregation instants, weights and dispatch counts are *identical* to the
@@ -67,6 +83,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.modelbank import gather_rows
 from repro.sched.contacts import ContactPlan
 from repro.sched.events import Event, EventKind, EventQueue
 from repro.sched.policies import make_handoff_policy, make_policy
@@ -123,10 +140,21 @@ class EventDrivenRuntime:
         # training occupancy per satellite (the §8 overlap invariant:
         # a satellite trains for at most one in-flight round at a time)
         self._busy_until = np.zeros(self.plan.num_sats)
+        # fault layer (DESIGN.md §10): the FaultModel lives on the
+        # simulation config; None short-circuits every check
+        self.fault = getattr(fls, "fault", None)
         self.stats: Dict[str, int] = {
             "rounds_opened": 0, "max_rounds_in_flight": 0,
             "pipelined_opens": 0, "cross_round_adoptions": 0,
-            "closed_round_arrivals": 0}
+            "closed_round_arrivals": 0,
+            # fault/retry telemetry (zero-filled so benchmark rows always
+            # carry the keys): failed attempts, rescheduled
+            # retransmissions, updates dropped after max_retries, updates
+            # dropped because the retry could never complete, and
+            # contention-shrunk trigger windows
+            "transfers_failed": 0, "transfer_retries": 0,
+            "dropped_after_max_retries": 0, "dropped_unreachable": 0,
+            "shrunk_windows": 0}
 
     # ---- lifecycle ---------------------------------------------------------
 
@@ -155,6 +183,7 @@ class EventDrivenRuntime:
             EventKind.MODEL_ARRIVAL: self._on_arrival,
             EventKind.TRIGGER_TIMEOUT: self._on_trigger,
             EventKind.SINK_HANDOFF: self._on_handoff,
+            EventKind.TRANSFER_FAILED: self._on_transfer_failed,
         }
         while self.events and not self._stop:
             ev = self.events.pop()
@@ -266,9 +295,19 @@ class EventDrivenRuntime:
         # routed to the carried-straggler path in _on_arrival
         rnd = self.rounds[ev.round_idx]
         ta = rnd.arr_time.get(ev.row)
-        if ta is not None and np.isfinite(ta):
-            self.events.push(Event(ta, EventKind.MODEL_ARRIVAL, rnd.idx,
+        if ta is None or not np.isfinite(ta):
+            return
+        fm = self.fault
+        if (fm is not None and fm.loss_prob > 0.0
+                and fm.transfer_fails(ev.sat, rnd.idx, 0)):
+            # the transfer is lost in flight: the failure surfaces at the
+            # would-be arrival instant (the sink notices a missing /
+            # corrupt update only when it was due), DESIGN.md §10
+            self.events.push(Event(ta, EventKind.TRANSFER_FAILED, rnd.idx,
                                    sat=ev.sat, row=ev.row))
+            return
+        self.events.push(Event(ta, EventKind.MODEL_ARRIVAL, rnd.idx,
+                               sat=ev.sat, row=ev.row))
 
     def _on_arrival(self, ev: Event) -> None:
         rnd = self.rounds[ev.round_idx]
@@ -317,6 +356,104 @@ class EventDrivenRuntime:
             self._maybe_close(rnd, ev.time)    # spurious: nothing to commit
             return
         self._commit(rnd, t_agg, used, late)
+
+    # ---- lossy transfers: retry / backoff / drop (DESIGN.md §10) -----------
+
+    def _locate_transfer(self, rnd: RoundState, row: int, sat: int,
+                         ta: float):
+        """Where an in-flight transfer's bookkeeping lives at failure
+        time: ("expected", i) while its round is uncommitted, ("pend", i)
+        after a commit carried it as a straggler, or None when a commit
+        tied at exactly the failure instant already adopted it (the model
+        made it into an aggregation — the failure is moot)."""
+        if not rnd.committed:
+            for i, a in enumerate(rnd.expected):
+                if a[2] == row:
+                    return ("expected", i)
+            return None
+        for i, (pta, ps, _ep) in enumerate(self.fls._pend_meta):
+            if ps == sat and pta == ta:
+                return ("pend", i)
+        return None
+
+    def _move_transfer(self, rnd: RoundState, loc, row: int, sat: int,
+                       new_ta: float) -> None:
+        """Re-time a pending transfer to its retry arrival instant."""
+        kind, i = loc
+        if kind == "expected":
+            rnd.expected[i] = (new_ta, sat, row)
+            rnd.expected.sort(key=lambda a: a[0])
+            rnd.arr_time[row] = new_ta
+        else:
+            pta, ps, ep = self.fls._pend_meta[i]
+            self.fls._pend_meta[i] = (new_ta, ps, ep)
+
+    def _retire_transfer(self, rnd: RoundState, loc, row: int,
+                         t: float) -> None:
+        """Drop an update whose transfer can never complete: remove its
+        bookkeeping (the carried device row too — _pend_dev rows are
+        indexed parallel to _pend_meta) and let the trigger policy rescue
+        a round that now waits on nothing."""
+        fls = self.fls
+        kind, i = loc
+        if kind == "pend":
+            keep = [j for j in range(len(fls._pend_meta)) if j != i]
+            fls._pend_meta = [fls._pend_meta[j] for j in keep]
+            fls._pend_dev = (gather_rows(fls._pend_dev,
+                                         np.asarray(keep, np.int32))
+                             if keep else None)
+        rnd.expected = [a for a in rnd.expected if a[2] != row]
+        rnd.arr_time.pop(row, None)
+        hook = getattr(self.policy, "on_expected_drop", None)
+        trig = hook(self, rnd, t) if hook is not None else None
+        if trig is not None and not rnd.closed:
+            if rnd.trigger_scheduled is None or trig < rnd.trigger_scheduled:
+                rnd.trigger_scheduled = trig
+            self.events.push(Event(trig, EventKind.TRIGGER_TIMEOUT, rnd.idx))
+        self._maybe_close(rnd, t)
+
+    def _on_transfer_failed(self, ev: Event) -> None:
+        fm = self.fault
+        rnd = self.rounds[ev.round_idx]
+        self.stats["transfers_failed"] += 1
+        loc = self._locate_transfer(rnd, ev.row, ev.sat, ev.time)
+        if loc is None:
+            return          # adopted by a same-instant commit: chain ends
+        attempt = ev.attempt + 1
+        new_ta = np.inf
+        snap = None
+        ctn = self.plan.contention
+        if attempt <= fm.max_retries:
+            t_retry = ev.time + fm.retry_delay_s(ev.attempt)
+            if t_retry < self.sim.duration_s:
+                # the retransmission re-enters the shared channel pools: a
+                # fresh uplink (and rx grant) from the backoff instant
+                snap = ctn.snapshot() if ctn is not None else None
+                with self.fls._seg("timing"):
+                    t_arr, _haps = self.plan.uplink_times(
+                        [ev.sat], [t_retry], self.bits, rnd.sink)
+                new_ta = float(t_arr[0])
+        else:
+            self.stats["dropped_after_max_retries"] += 1
+            self._retire_transfer(rnd, loc, ev.row, ev.time)
+            return
+        if not np.isfinite(new_ta) or new_ta >= self.sim.duration_s:
+            # unreachable sink or a landing past the horizon: the transfer
+            # will never happen, so its channel grant is rolled back (no
+            # occupancy ghosts — the same contract as aborted speculative
+            # opens) and the update is dropped
+            if snap is not None:
+                ctn.restore(snap)
+            self.stats["dropped_unreachable"] += 1
+            self._retire_transfer(rnd, loc, ev.row, ev.time)
+            return
+        self.stats["transfer_retries"] += 1
+        self._move_transfer(rnd, loc, ev.row, ev.sat, new_ta)
+        kind = (EventKind.TRANSFER_FAILED
+                if fm.transfer_fails(ev.sat, rnd.idx, attempt)
+                else EventKind.MODEL_ARRIVAL)
+        self.events.push(Event(new_ta, kind, rnd.idx, sat=ev.sat,
+                               row=ev.row, attempt=attempt))
 
     def _on_handoff(self, ev: Event) -> None:
         # the round stays registered: stale TRAIN_DONE / MODEL_ARRIVAL

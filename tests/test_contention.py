@@ -192,6 +192,34 @@ def test_cross_round_contention_degrades_pipelining():
     assert rt.contention_stats()["rx"]["queue_wait_s"] > 0.0
 
 
+def test_mid_batch_snapshot_restore_interleaved_rounds():
+    """§10 rollback point: a snapshot taken mid-batch — after round A's
+    first grant, with round B's grants interleaved on both pools before
+    the rollback — must restore exactly the prefix state, and the same
+    snapshot object must survive several restores (restore copies again,
+    so a retry loop can roll back repeatedly from one checkpoint)."""
+    c = ContentionModel(2, 1)
+    assert c.grant_rx(0, 0.0, 10.0) == 0.0        # round A, transfer 1
+    snap = c.snapshot()
+    # everything after the checkpoint: A's second transfer, round B's
+    # grants on the other PS and on A's own pools
+    assert c.grant_rx(0, 5.0, 10.0) == 10.0       # A queues behind A
+    assert c.grant_tx(1, 0.0, 10.0) == 0.0        # B: tx on the other PS
+    assert c.grant_rx(0, 12.0, 10.0) == 20.0      # B: queues behind both
+    assert c.grant_tx(0, 3.0, 10.0) == 3.0        # B: tx on A's PS
+    c.restore(snap)
+    assert (c.tx.grants, c.rx.grants) == (0, 1)
+    assert c.tx.res == snap[0].res and c.rx.res == snap[1].res
+    # re-grants see the prefix occupancy, not the rolled-back one
+    assert c.grant_rx(0, 5.0, 10.0) == 10.0
+    assert c.grant_tx(0, 3.0, 10.0) == 3.0
+    # reusable snapshot: a second restore discards the re-grants too
+    c.restore(snap)
+    assert (c.tx.grants, c.rx.grants) == (0, 1)
+    assert c.rx.intervals(0) == [(0, 0.0, 10.0)]
+    assert c.tx.intervals(0) == []
+
+
 def test_aborted_speculative_open_rolls_back_grants():
     """A speculative open that recruits nobody (everyone busy) must leave
     the channel pools exactly as it found them — no occupancy ghosts from

@@ -1,0 +1,376 @@
+"""Fault-injection / heterogeneity suite (sched/faults.FaultModel,
+DESIGN.md §10) and the staleness-function zoo (core/aggregation).
+
+Covers: FaultModel + StrategySpec construction validation, the
+off-switch bit-parity contract (fault_model=None == FaultModel() ==
+the PR-5 semantics — the CI-pinned gate), seeded determinism of the
+fault schedule, compute-rate heterogeneity (stretched TRAIN_DONE times,
+epoch-loop-vs-runtime parity preserved), eclipse availability masking,
+lossy transfers with bounded retry/backoff (retry telemetry, drop after
+max retries, termination under total loss, barrier rescue on drops, the
+epoch loop refusing loss), the staleness zoo's eq13-default parity, and
+the contention-aware trigger-window shrink.
+"""
+import dataclasses
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import FLSimulation, SimConfig
+from repro.core import aggregation as agg
+from repro.core.aggregation import (SatelliteMeta, STALENESS_FNS,
+                                    asyncfleo_weights, staleness_factor)
+from repro.core.links import LinkModel
+from repro.fl import get_strategy
+from repro.fl.strategies import StrategySpec, _STALENESS_FNS
+from repro.sched import EventDrivenRuntime, FaultModel
+from repro.sched.policies import AsyncFLEOPolicy, make_policy
+
+from test_epoch_step import TinyFusedTrainer, W0
+
+SIMKW = dict(duration_s=86400.0, train_time_s=300.0,
+             use_model_bank=True, use_fused_step=True)
+SLOW = LinkModel(rate_bps=10.0)          # 288-bit W0 -> 28.8 s per transfer
+
+
+def _sim(name, event_driven, *, spec_kw=None, **kw):
+    cfg = SimConfig(event_driven=event_driven, **{**SIMKW, **kw})
+    spec = get_strategy(name)
+    if spec_kw:
+        spec = dataclasses.replace(spec, **spec_kw)
+    return FLSimulation(spec, TinyFusedTrainer(W0), None, cfg)
+
+
+def _rows(hist):
+    return [(r.epoch, round(r.time_s, 6), r.num_models,
+             round(r.gamma, 6), r.stale_groups) for r in hist]
+
+
+# ---- construction validation ------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(seed=-1), dict(loss_prob=1.5), dict(loss_prob=-0.1),
+    dict(max_retries=-1), dict(retry_backoff_s=0.0),
+    dict(eclipse_fraction=1.0), dict(eclipse_fraction=-0.2),
+    dict(eclipse_period_s=0.0), dict(compute_rate_spread=-1.0),
+    dict(compute_rates=()), dict(compute_rates=(1.0, 0.0)),
+])
+def test_fault_model_validation(kw):
+    with pytest.raises(ValueError):
+        FaultModel(**kw)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(ps_channels=0), dict(ps_channels=-3), dict(max_in_flight=0),
+    dict(group_timeouts=("bad",)), dict(group_timeouts=((0,),)),
+    dict(group_timeouts=((0, -5.0),)), dict(group_timeouts=((0.5, 10.0),)),
+    dict(staleness_fn="nope"), dict(agg_mode="typo"),
+    dict(interval_s=0.0), dict(num_groups=0),
+    dict(rx_backlog_threshold_s=-1.0), dict(rx_backlog_window_scale=0.0),
+    dict(rx_backlog_window_scale=1.5),
+])
+def test_spec_validation_rejects(kw):
+    """Malformed specs fail at construction with a clear ValueError, not
+    deep in the runtime."""
+    base = get_strategy("asyncfleo-gs")
+    with pytest.raises(ValueError):
+        dataclasses.replace(base, **kw)
+
+
+def test_spec_validation_accepts_valid():
+    spec = dataclasses.replace(
+        get_strategy("asyncfleo-gs"), ps_channels=4, max_in_flight=3,
+        group_timeouts=((-1, 900.0), (0, 1200.0)), staleness_fn="poly",
+        rx_backlog_threshold_s=0.0, rx_backlog_window_scale=0.25)
+    assert spec.ps_channels == 4
+
+
+def test_staleness_fns_tables_in_sync():
+    """strategies.py validates against a literal mirror of the canonical
+    aggregation table (kept import-light) — they must not drift."""
+    assert _STALENESS_FNS == STALENESS_FNS
+
+
+# ---- staleness-function zoo -------------------------------------------------
+
+def test_staleness_factor_zoo():
+    # eq13: k_n / beta
+    assert staleness_factor("eq13", 10, 7) == pytest.approx(0.7)
+    assert staleness_factor("eq13", 10, -1) == 0.0       # never joined
+    # constant: no mitigation
+    assert staleness_factor("constant", 10, 0) == 1.0
+    # hinge: flat 1 up to the breakpoint, then 1/(a*(d-b))
+    assert staleness_factor("hinge", 6, 0) == 1.0        # d = 6 = b
+    assert staleness_factor("hinge", 7, 0) == pytest.approx(1 / 10.0)
+    assert staleness_factor("hinge", 16, 0) == pytest.approx(1 / 100.0)
+    # poly: (1+d)^-a
+    assert staleness_factor("poly", 0, 0) == 1.0
+    assert staleness_factor("poly", 3, 0) == pytest.approx(0.5)
+    # all zoo members give a fresh model (d=0) full weight and decay
+    # monotonically with the gap
+    for fn in ("constant", "hinge", "poly"):
+        assert staleness_factor(fn, 5, 5) == 1.0
+        vals = [staleness_factor(fn, b, 0) for b in range(0, 20)]
+        assert all(a >= b for a, b in zip(vals, vals[1:]))
+    with pytest.raises(ValueError):
+        staleness_factor("nope", 1, 0)
+
+
+def _metas():
+    return [SatelliteMeta(0, 100.0, (0, 0), 10.0, 5),     # fresh at beta=5
+            SatelliteMeta(1, 100.0, (0, 0), 11.0, 2),     # stale
+            SatelliteMeta(2, 50.0, (0, 0), 12.0, 0)]      # very stale
+
+
+def test_asyncfleo_weights_staleness_fn():
+    # per-model groups so the stale ones survive Alg. 2 selection (a
+    # group with a fresh member discards its stale members)
+    groups = {0: [0], 1: [1], 2: [2]}
+    # eq13 explicitly == eq13 by default (the byte-identical contract)
+    d0 = asyncfleo_weights(groups, _metas(), 5)
+    d1 = asyncfleo_weights(groups, _metas(), 5, staleness_fn="eq13")
+    np.testing.assert_array_equal(d0[1], d1[1])
+    assert d0[2] == d1[2]
+    # a zoo member changes the stale weighting but stays convex
+    sel, w, gamma, info = asyncfleo_weights(groups, _metas(), 5,
+                                            staleness_fn="poly")
+    assert sel == [0, 1, 2]
+    assert 0.0 < gamma <= 1.0
+    assert w.sum() == pytest.approx(gamma)
+    assert not np.allclose(w, d0[1])
+    # constant == no mitigation: stale models keep pure size weights
+    _, wc, gc, _ = asyncfleo_weights(groups, _metas(), 5,
+                                     staleness_fn="constant")
+    np.testing.assert_allclose(wc, gc * np.array([100, 100, 50.0]) / 250.0)
+
+
+def test_staleness_fn_threads_through_simulation():
+    """StrategySpec.staleness_fn reaches the committed gamma; eq13 (the
+    default) is bit-identical to a spec that never heard of the field."""
+    a = _sim("asyncfleo-twohap", True)
+    b = _sim("asyncfleo-twohap", True, spec_kw=dict(staleness_fn="eq13"))
+    c = _sim("asyncfleo-twohap", True, spec_kw=dict(staleness_fn="poly"))
+    ha = a.run(W0, max_epochs=5)
+    hb = b.run(W0, max_epochs=5)
+    hc = c.run(W0, max_epochs=5)
+    assert _rows(ha) == _rows(hb)
+    np.testing.assert_array_equal(np.asarray(a._w_flat),
+                                  np.asarray(b._w_flat))
+    assert len(hc) == len(ha)        # the zoo member still runs to length
+
+
+# ---- off-switch bit-parity (the CI-pinned contract) -------------------------
+
+def test_fault_model_none_attaches_no_state():
+    fls = _sim("asyncfleo-twohap", True)
+    assert fls.fault is None and fls._train_scale is None
+
+
+def test_null_fault_model_bit_identical():
+    """fault_model=None and an all-off FaultModel() take identical code
+    paths: same histories, same weights, under both drivers."""
+    fm = FaultModel()
+    assert fm.is_null
+    for ed in (False, True):
+        a = _sim("asyncfleo-twohap", ed)
+        b = _sim("asyncfleo-twohap", ed, fault_model=fm)
+        ha = a.run(W0, max_epochs=5)
+        hb = b.run(W0, max_epochs=5)
+        assert _rows(ha) == _rows(hb)
+        np.testing.assert_array_equal(np.asarray(a._w_flat),
+                                      np.asarray(b._w_flat))
+        assert a._fused_prog.dispatches == b._fused_prog.dispatches
+
+
+# ---- compute-rate heterogeneity ---------------------------------------------
+
+def test_train_time_scale_shapes():
+    fm = FaultModel(compute_rate_spread=2.0)
+    s = fm.train_time_scale(40)
+    assert s.shape == (40,) and (s >= 1.0).all() and (s <= 3.0).all()
+    assert s.max() > 1.0
+    np.testing.assert_array_equal(s, fm.train_time_scale(40))  # seeded
+    assert FaultModel(compute_rate_spread=0.0).train_time_scale(40) is None
+    ex = FaultModel(compute_rates=(1.0, 2.0, 3.0))
+    np.testing.assert_array_equal(ex.train_time_scale(2), [1.0, 2.0])
+    with pytest.raises(ValueError):
+        ex.train_time_scale(5)           # fewer rates than satellites
+
+
+def test_compute_spread_changes_timing_keeps_driver_parity():
+    """Heterogeneous compute stretches TRAIN_DONE times (the history
+    moves), but the epoch loop and the event runtime still agree exactly
+    — both route through the ONE shared `_train_times`."""
+    fm = FaultModel(compute_rate_spread=1.5, eclipse_fraction=0.2)
+    base = _sim("asyncfleo-twohap", True).run(W0, max_epochs=4)
+    a = _sim("asyncfleo-twohap", False, fault_model=fm)
+    b = _sim("asyncfleo-twohap", True, fault_model=fm)
+    ha = a.run(W0, max_epochs=4)
+    hb = b.run(W0, max_epochs=4)
+    assert _rows(ha) == _rows(hb)
+    assert a._fused_prog.dispatches == b._fused_prog.dispatches
+    assert _rows(hb) != _rows(base)      # the faults actually bite
+
+
+# ---- eclipse availability ---------------------------------------------------
+
+def test_eclipse_masks_visibility():
+    fm = FaultModel(eclipse_fraction=0.3)
+    base = _sim("asyncfleo-twohap", True)
+    ecl = _sim("asyncfleo-twohap", True, fault_model=fm)
+    assert ecl.timeline.grid.sum() < base.timeline.grid.sum()
+    # deterministic: same seed -> same mask
+    ecl2 = _sim("asyncfleo-twohap", True, fault_model=fm)
+    np.testing.assert_array_equal(ecl.timeline.grid, ecl2.timeline.grid)
+    # availability_mask itself: each sat dark for ~the configured fraction
+    mask = fm.availability_mask(np.arange(0.0, 54000.0, 10.0), 8)
+    dark = 1.0 - mask.mean(axis=0)
+    np.testing.assert_allclose(dark, 0.3, atol=0.02)
+    assert FaultModel().availability_mask(np.zeros(3), 4) is None
+
+
+# ---- lossy transfers: retry / backoff / drop --------------------------------
+
+def test_transfer_fails_deterministic_schedule():
+    fm = FaultModel(loss_prob=0.4)
+    draws = [fm.transfer_fails(s, r, a)
+             for s in range(8) for r in range(4) for a in range(3)]
+    draws2 = [fm.transfer_fails(s, r, a)
+              for s in range(8) for r in range(4) for a in range(3)]
+    assert draws == draws2 and any(draws) and not all(draws)
+    # keyed draws: a different seed gives a different schedule
+    fm2 = FaultModel(seed=7, loss_prob=0.4)
+    assert draws != [fm2.transfer_fails(s, r, a)
+                     for s in range(8) for r in range(4) for a in range(3)]
+    assert FaultModel(loss_prob=0.0).transfer_fails(0, 0, 0) is False
+    assert FaultModel(loss_prob=1.0).transfer_fails(0, 0, 0) is True
+    assert fm.retry_delay_s(0) == pytest.approx(120.0)
+    assert fm.retry_delay_s(3) == pytest.approx(960.0)
+
+
+def test_lossy_transfers_retry_and_recover():
+    """30% loss with generous retries: failures and retransmissions show
+    up in the telemetry, every epoch still commits, and the whole run is
+    reproducible (the seeded schedule is independent of event order)."""
+    fm = FaultModel(loss_prob=0.3, max_retries=5, retry_backoff_s=60.0)
+    a = _sim("asyncfleo-twohap", True, fault_model=fm)
+    rt = EventDrivenRuntime(a)
+    ha = rt.run(W0, max_epochs=5)
+    assert len(ha) == 5
+    assert rt.stats["transfers_failed"] > 0
+    assert rt.stats["transfer_retries"] > 0
+    assert rt.events.counts["TRANSFER_FAILED"] == rt.stats["transfers_failed"]
+    b = _sim("asyncfleo-twohap", True, fault_model=fm)
+    rtb = EventDrivenRuntime(b)
+    hb = rtb.run(W0, max_epochs=5)
+    assert _rows(ha) == _rows(hb)
+    assert rt.stats == rtb.stats
+    np.testing.assert_array_equal(np.asarray(a._w_flat),
+                                  np.asarray(b._w_flat))
+
+
+def test_total_loss_drops_after_max_retries_and_terminates():
+    """loss_prob=1: every chain burns its retries and drops; rounds
+    resolve as 0-model commits (the on_expected_drop rescue) instead of
+    hanging, and the run terminates at max_epochs."""
+    fm = FaultModel(loss_prob=1.0, max_retries=1, retry_backoff_s=60.0)
+    fls = _sim("asyncfleo-twohap", True, fault_model=fm)
+    rt = EventDrivenRuntime(fls)
+    hist = rt.run(W0, max_epochs=4)
+    assert [r.num_models for r in hist] == [0, 0, 0, 0]
+    assert rt.stats["dropped_after_max_retries"] > 0
+    # every failed transfer either retried or dropped — nothing leaks
+    assert rt.stats["transfers_failed"] == (
+        rt.stats["transfer_retries"]
+        + rt.stats["dropped_after_max_retries"]
+        + rt.stats["dropped_unreachable"])
+
+
+def test_sync_barrier_rescued_on_drops():
+    """A barrier round whose transfers all drop must not stall until
+    sync_stall_s — on_expected_drop fires the trigger as soon as nothing
+    is left in flight."""
+    fm = FaultModel(loss_prob=1.0, max_retries=0)
+    fls = _sim("fedisl", True, fault_model=fm)
+    rt = EventDrivenRuntime(fls)
+    hist = rt.run(W0, max_epochs=3)
+    assert len(hist) == 3
+    assert all(r.num_models == 0 for r in hist)
+    assert rt.stats["dropped_after_max_retries"] > 0
+
+
+def test_partial_loss_fewer_models_than_baseline():
+    fm = FaultModel(loss_prob=0.5, max_retries=1, retry_backoff_s=600.0)
+    base = _sim("asyncfleo-twohap", True).run(W0, max_epochs=4)
+    rt = EventDrivenRuntime(_sim("asyncfleo-twohap", True, fault_model=fm))
+    hist = rt.run(W0, max_epochs=4)
+    n_base = sum(r.num_models for r in base)
+    n_fault = sum(r.num_models for r in hist)
+    assert 0 < n_fault < n_base
+    assert rt.stats["dropped_after_max_retries"] > 0
+
+
+def test_loss_requires_event_runtime():
+    fm = FaultModel(loss_prob=0.2)
+    fls = _sim("asyncfleo-twohap", False, fault_model=fm)
+    with pytest.raises(ValueError, match="event-driven"):
+        fls.run(W0, max_epochs=2)
+
+
+def test_retries_reenter_channel_pools():
+    """With finite ps_channels, retransmissions charge fresh rx grants:
+    the lossy run books strictly more rx grants than the loss-free run
+    of the same scenario."""
+    kw = dict(link=SLOW, spec_kw=dict(ps_channels=2))
+    a = _sim("asyncfleo-twohap", True, **kw)
+    ra = EventDrivenRuntime(a)
+    ra.run(W0, max_epochs=4)
+    fm = FaultModel(loss_prob=0.4, max_retries=4, retry_backoff_s=60.0)
+    b = _sim("asyncfleo-twohap", True, fault_model=fm, **kw)
+    rb = EventDrivenRuntime(b)
+    rb.run(W0, max_epochs=4)
+    assert rb.stats["transfer_retries"] > 0
+    assert (rb.contention_stats()["rx"]["grants"]
+            > ra.contention_stats()["rx"]["grants"])
+
+
+# ---- contention-aware trigger windows (off by default) ----------------------
+
+def test_window_shrink_unit():
+    """Backlog above the threshold scales the window; below leaves it
+    untouched; threshold None is the bit-identical off switch."""
+    fls = _sim("asyncfleo-twohap", True,
+               spec_kw=dict(ps_channels=1, rx_backlog_threshold_s=10.0,
+                            rx_backlog_window_scale=0.5))
+    rt = EventDrivenRuntime(fls)
+    pol = rt.policy
+    assert isinstance(pol, AsyncFLEOPolicy)
+    assert pol.rx_backlog_threshold_s == 10.0
+    rnd = SimpleNamespace(sink=0, t_start=0.0, trigger_scheduled=None,
+                          expected=[(1.0, 0, 0)], group_first={})
+    w = rt.sim.agg_timeout_s
+    assert pol.on_arrival(rt, rnd, 100.0) == pytest.approx(100.0 + w)
+    fls.plan.contention.grant_rx(0, 50.0, 500.0)    # load the rx pool
+    rnd.trigger_scheduled = None
+    assert pol.on_arrival(rt, rnd, 100.0) == pytest.approx(100.0 + 0.5 * w)
+    assert rt.stats["shrunk_windows"] == 1
+    # default spec: the field stays None and split delegates to _trigger
+    off = make_policy(get_strategy("asyncfleo-gs"))
+    assert off.rx_backlog_threshold_s is None
+
+
+def test_window_shrink_end_to_end():
+    """Shrink enabled under heavy contention: the run completes, commits
+    earlier-or-equal windows, and counts the shrinks."""
+    base = _sim("asyncfleo-twohap", True, link=SLOW,
+                spec_kw=dict(ps_channels=1))
+    hb = base.run(W0, max_epochs=4)
+    tight = _sim("asyncfleo-twohap", True, link=SLOW,
+                 spec_kw=dict(ps_channels=1, rx_backlog_threshold_s=0.0,
+                              rx_backlog_window_scale=0.25))
+    rt = EventDrivenRuntime(tight)
+    ht = rt.run(W0, max_epochs=4)
+    assert len(ht) == 4
+    assert rt.stats["shrunk_windows"] > 0
+    assert ht[0].time_s <= hb[0].time_s    # first window can only shrink

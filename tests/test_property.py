@@ -163,3 +163,37 @@ def test_chunked_scan_equals_sequential(seed, chunk, include_current):
                                atol=2e-5, rtol=1e-3)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
                                atol=2e-5, rtol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(ops=st.lists(st.tuples(st.integers(0, 2),          # PS id
+                              st.floats(0.0, 1000.0),     # request time
+                              st.floats(0.1, 60.0)),      # duration
+                    min_size=1, max_size=30),
+       snap_at=st.integers(0, 29), restore_at=st.integers(0, 29),
+       channels=st.integers(1, 3))
+def test_retries_never_double_reserve(ops, snap_at, restore_at, channels):
+    """The §10 retry invariant: however grants, snapshots and restores
+    interleave (a lossy retry rolls back its speculative grant and
+    re-books after the backoff), every channel's busy intervals stay
+    sorted and pairwise disjoint — a retransmission can never
+    double-reserve a channel interval — and every grant honors its
+    request time."""
+    from repro.sched.contacts import ContentionModel
+    c = ContentionModel(3, channels)
+    snap = None
+    for i, (ps, t, d) in enumerate(ops):
+        if i == snap_at:
+            snap = c.snapshot()
+        assert c.grant_rx(ps, t, d) >= t
+        if i == restore_at and snap is not None:
+            c.restore(snap)                  # retry rollback...
+            assert c.grant_rx(ps, t + d, d) >= t + d   # ...re-book later
+    for ps in range(3):
+        per_ch = {}
+        for ch, s, e in c.rx.intervals(ps):
+            per_ch.setdefault(ch, []).append((s, e))
+        for ivs in per_ch.values():
+            assert ivs == sorted(ivs)
+            assert all(s < e for s, e in ivs)
+            assert all(e0 <= s1 for (_, e0), (s1, _) in zip(ivs, ivs[1:]))
