@@ -48,6 +48,16 @@ all-off cell (dropout 0, spread 0, eq13; ``fault_model=None``) must
 match the main async row EXACTLY (the §10 off-switch parity pin), and
 every dropout=20% cell must still reach the target accuracy.
 
+Two §11 robustness cells ride along with the fault sweep: the
+**defaults-parity row** re-runs the main async scenario with an
+explicit ``FaultModel()`` (burst / outage / energy / adaptive-backoff
+axes all at their defaults) and the gate requires it to match the
+``fault_model=None`` row on every deterministic key, and the **outage
+smoke cell** (``outage_smoke``) runs pipelined AsyncFLEO on the
+two-HAP ring with one HAP dark for a contiguous 30% of the horizon —
+the gate requires ring failover + lazy arrival reroutes to carry it to
+the target anyway.
+
 ``--cnn-sats 200`` appends the accuracy-aware convergence-delay study:
 the async / pipelined / sync head-to-head re-run with REAL federated CNN
 training (non-IID class-conditional shards) at S >= 200, where the
@@ -167,8 +177,11 @@ def bench_policy(name: str, strategy: str, w0, target: float,
                  max_epochs: int, duration_s: float,
                  ps_channels: Optional[int] = None,
                  link: Optional[LinkModel] = None,
-                 fault=None, staleness_fn: str = "eq13") -> Dict:
+                 fault=None, staleness_fn: str = "eq13",
+                 spec_kw: Optional[Dict] = None) -> Dict:
     spec = get_strategy(strategy)
+    if spec_kw:
+        spec = dataclasses.replace(spec, **spec_kw)
     if ps_channels is not None:
         spec = dataclasses.replace(spec, ps_channels=ps_channels)
     if staleness_fn != "eq13":
@@ -216,6 +229,16 @@ def bench_policy(name: str, strategy: str, w0, target: float,
                                 else float(fls._train_scale.min())),
             "train_scale_max": (1.0 if fls._train_scale is None
                                 else float(fls._train_scale.max())),
+            # §11 degradation-and-recovery config (the realized outage /
+            # energy / backoff telemetry is in sched_stats above)
+            "burst_len_s": fault.burst_len_s,
+            "loss_prob_bad": fault.loss_prob_bad,
+            "loss_prob_good": fault.loss_prob_good,
+            "ps_outages": (None if fault.ps_outages is None
+                           else [list(iv) for iv in fault.ps_outages]),
+            "ps_outage_fraction": fault.ps_outage_fraction,
+            "battery_j": fault.battery_j,
+            "adaptive_backoff": fault.adaptive_backoff,
         },
         "wall_s": wall,
         "plan": fls.plan.summary(),
@@ -285,6 +308,33 @@ def fault_sweep(w0, target: float, max_epochs: int, duration_s: float,
     return {"dropouts": list(FAULT_DROPOUTS),
             "compute_rate_spreads": list(FAULT_SPREADS),
             "staleness_fns": list(FAULT_STALENESS), "cells": cells}
+
+
+def outage_smoke(w0, target: float, max_epochs: int,
+                 duration_s: float) -> Dict:
+    """The §11 PS-outage smoke cell: pipelined AsyncFLEO on the two-HAP
+    ring with one HAP dark for a contiguous 30% of the horizon
+    (explicit ``ps_outages``).  Ring failover + lazy arrival reroutes
+    must carry the run to the target anyway — ``--fail-if-not-lower``
+    gates on it converging.  The ``sched_stats`` telemetry
+    (``sink_failovers`` / ``rerouted_arrivals`` / ``dropped_outage``)
+    records how much recovery work that took."""
+    from repro.sched import FaultModel
+    # the dark window opens ~33 min in — right on top of the active
+    # rounds (with the ring handoff, every other in-flight round is
+    # sunk at PS 0 by then), not parked in the idle tail of the horizon
+    dark = (0, 2000.0, 2000.0 + 0.3 * duration_s)
+    fm = FaultModel(ps_outages=(dark,))
+    r = bench_policy("async_pipelined_outage", "asyncfleo-twohap", w0,
+                     target, max_epochs, duration_s, fault=fm,
+                     spec_kw=dict(max_in_flight=3))
+    st = r["sched_stats"]
+    print(f"[outage ps=0 dark {dark[1] / 3600.0:.1f}-{dark[2] / 3600.0:.1f} h]"
+          f" conv {_h(r['convergence_delay_s'])} h  "
+          f"failovers {st['sink_failovers']:2d}  "
+          f"rerouted {st['rerouted_arrivals']:3d}  "
+          f"dropped {st['dropped_outage']:3d}")
+    return {"ps_outages": [list(dark)], "row": r}
 
 
 def _h(delay_s) -> str:
@@ -433,6 +483,16 @@ def main():
         report["fault_sweep"] = fault_sweep(
             w0, args.target, args.max_epochs, args.days * 86400.0,
             ps_channels=main_channels)
+        # §11 defaults bit-parity row: an EXPLICIT FaultModel() — every
+        # new axis at its default — must reproduce the fault=None main
+        # async row exactly (gated below)
+        from repro.sched import FaultModel
+        report["fault_defaults_parity"] = bench_policy(
+            "async_fault_defaults", "asyncfleo-gs", w0, args.target,
+            args.max_epochs, args.days * 86400.0,
+            ps_channels=main_channels, fault=FaultModel())
+        report["outage_smoke"] = outage_smoke(
+            w0, args.target, args.max_epochs, args.days * 86400.0)
 
     if args.cnn_sats:
         report["cnn_study"] = cnn_study(args.cnn_sats, args.cnn_target,
@@ -493,6 +553,24 @@ def main():
                 raise SystemExit(
                     f"{len(bad)} dropout={max(FAULT_DROPOUTS)} fault "
                     f"cells failed to reach the target accuracy")
+            # §11 defaults bit-parity gate: the explicit-FaultModel()
+            # row (burst / outage / energy / adaptive-backoff axes all
+            # at their defaults) must match the fault=None main async
+            # row on every deterministic key — the new axes' off
+            # switches are bit-exact, not just approximately quiet
+            null_fm = report["fault_defaults_parity"]
+            drift = [k for k in keys if null_fm[k] != ref[k]]
+            if drift:
+                raise SystemExit(
+                    f"§11 defaults parity broken: explicit FaultModel() "
+                    f"row differs from the main async row on {drift}")
+            # §11 outage smoke gate: pipelined async must still reach
+            # the target with one ring HAP dark for a contiguous 30% of
+            # the horizon (ring failover + arrival reroutes)
+            if report["outage_smoke"]["row"]["convergence_delay_s"] is None:
+                raise SystemExit(
+                    "outage smoke cell failed: pipelined async did not "
+                    "reach the target with one PS dark 30% of the horizon")
 
 
 if __name__ == "__main__":

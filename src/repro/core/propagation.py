@@ -46,12 +46,25 @@ class PropagationModel:
     def sat_ps_delay(self, bits: float, sat: int, ps: int, t: float) -> float:
         return self.link.total_delay(bits, self.topo.sat_ps_distance(sat, ps, t))
 
-    def ring_relay_delay(self, bits: float, src: int, dst: int, t0):
+    def ring_relay_delay(self, bits: float, src: int, dst: int, t0,
+                         avoid=()):
         """Accumulated IHL delay along the *actual* shorter ring arc
         src -> dst: each successive HAP pair contributes its own delay,
         evaluated at the model's current arrival time.  ``t0`` may be a
-        scalar or a vector of per-model send times."""
-        path = self.topo.ring_path(src, dst)
+        scalar or a vector of per-model send times.
+
+        ``avoid`` (default empty — identical behavior) lists HAPs the
+        relay may not transit (e.g. PSs inside an outage window,
+        DESIGN.md §11): the relay takes the other ring arc when the
+        shorter arc's interior is blocked, and returns +inf when both
+        arcs are (the model cannot reach ``dst`` right now)."""
+        if avoid:
+            path = self.topo.ring_path_via(src, dst, avoid)
+            if path is None:
+                return np.full_like(np.asarray(t0, np.float64), np.inf) \
+                    if np.ndim(t0) else np.inf
+        else:
+            path = self.topo.ring_path(src, dst)
         t = np.asarray(t0, dtype=np.float64)
         for a, b in zip(path, path[1:]):
             t = t + self.link.total_delay(bits, self.topo.ihl_distance(a, b, t))

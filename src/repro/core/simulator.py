@@ -132,12 +132,27 @@ class FLSimulation:
         # math, bit-identical to the fault-free path)
         self.fault = getattr(sim, "fault_model", None)
         self._train_scale = None
+        self._outages = None
         if self.fault is not None:
             S = self.constellation.num_sats
             self._train_scale = self.fault.train_time_scale(S)
             mask = self.fault.availability_mask(self.timeline.times, S)
             if mask is not None:
                 self.timeline.grid &= mask[:, :, None]
+            # PS outage windows (DESIGN.md §11) mask the PS axis the same
+            # way — a dark parameter server has no satellite contacts —
+            # and the compiled OutageSchedule drives the event runtime's
+            # ring-failover recovery.  No outage config -> no schedule,
+            # no grid mutation at all (the off-switch contract)
+            omask = self.fault.outage_mask(self.timeline.times,
+                                           len(self.nodes), sim.duration_s)
+            if omask is not None:
+                from repro.sched.faults import OutageSchedule
+                self.timeline.grid &= omask[:, None, :]
+                self._outages = OutageSchedule(
+                    self.fault.outage_intervals(len(self.nodes),
+                                                sim.duration_s),
+                    len(self.nodes))
         self.topo = RingOfStars(self.constellation, self.nodes, self.timeline)
         self.prop = PropagationModel(self.topo, sim.link or LinkModel())
         # the compiled contact plan owns the downlink/uplink timing rules
@@ -792,11 +807,19 @@ class FLSimulation:
             from repro.sched.runtime import EventDrivenRuntime
             return EventDrivenRuntime(self).run(
                 w0, max_epochs, target_accuracy=target_accuracy)
-        if self.fault is not None and self.fault.loss_prob > 0.0:
+        if self.fault is not None and self.fault.has_loss:
             raise ValueError(
-                "FaultModel.loss_prob > 0 requires the event-driven runtime "
+                "FaultModel transfer loss (loss_prob > 0 or burst_len_s "
+                "> 0) requires the event-driven runtime "
                 "(SimConfig.event_driven=True): the epoch loop cannot "
                 "express TRANSFER_FAILED retry chains")
+        if self.fault is not None and (self.fault.has_outages
+                                       or self.fault.has_energy):
+            raise ValueError(
+                "FaultModel PS outages / energy budgets require the "
+                "event-driven runtime (SimConfig.event_driven=True): the "
+                "epoch loop cannot express ring failover or deferred "
+                "uplinks (DESIGN.md §11)")
         bits, fused, stacked = self._init_run(w0)
         w_tree = w0                       # pytree view (trainer/evaluator)
         t = 0.0

@@ -49,6 +49,23 @@ class RingOfStars:
         step, hops = (1, fwd) if fwd <= H - fwd else (-1, H - fwd)
         return [(src + i * step) % H for i in range(hops + 1)]
 
+    def ring_path_via(self, src: int, dst: int,
+                      avoid=()) -> Optional[List[int]]:
+        """Like ``ring_path`` but routing around the ``avoid`` HAPs
+        (e.g. PSs inside an outage window, DESIGN.md §11): the shorter
+        arc when its interior is clear, else the other arc, else None
+        (both arcs blocked — src/dst endpoints are never checked)."""
+        H = self.num_ps
+        fwd = (dst - src) % H
+        step, hops = (1, fwd) if fwd <= H - fwd else (-1, H - fwd)
+        arcs = [[(src + i * step) % H for i in range(hops + 1)]]
+        if 0 < fwd < H and hops < H:
+            arcs.append([(src - i * step) % H for i in range(H - hops + 1)])
+        for path in arcs:
+            if not any(p in avoid for p in path[1:-1]):
+                return path
+        return None
+
     def ihl_distance(self, a: int, b: int, t):
         """HAP a <-> b distance; ``t`` may be scalar or an array of times."""
         d = np.linalg.norm(self.nodes[a].position(t)

@@ -81,6 +81,13 @@ class StrategySpec:
     # bit-identical to the uncontended trigger logic
     rx_backlog_threshold_s: Optional[float] = None
     rx_backlog_window_scale: float = 0.5
+    # fault-aware participant selection (DESIGN.md §11): when True, the
+    # event runtime skips recruiting satellites whose FaultModel eclipse
+    # window covers the expected uplink instant (recv + training time),
+    # or whose expected uplink lands in a total PS outage — the model
+    # would only wait out the dark window anyway.  False (default) keeps
+    # recruitment bit-identical to the fault-unaware runtime
+    fault_aware_selection: bool = False
 
     def __post_init__(self):
         """Fail fast on malformed specs — a bad channel count or timeout

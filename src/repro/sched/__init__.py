@@ -7,11 +7,13 @@
 # finite per-PS link capacity (ContentionModel: StrategySpec.ps_channels
 # parallel tx/rx channels per PS, FIFO grants, cross-round serialization),
 # plus a pluggable fault/heterogeneity layer (FaultModel: per-sat compute
-# rates, eclipse availability, lossy transfers with bounded retry/backoff).
+# rates, eclipse availability, lossy transfers with bounded retry/backoff)
+# and its §11 degradation-and-recovery axes (Gilbert–Elliott burst loss,
+# PS outage schedules with ring failover, per-sat energy budgets).
 from repro.sched.contacts import (ChannelPool, ContactPlan, ContactWindow,
                                   ContentionModel)
 from repro.sched.events import Event, EventKind, EventQueue
-from repro.sched.faults import FaultModel
+from repro.sched.faults import EnergyState, FaultModel, OutageSchedule
 from repro.sched.policies import (AsyncFLEOPolicy, FedAsyncPolicy,
                                   HANDOFF_POLICIES, NextContactHandoff,
                                   POLICIES, RingHandoff, SyncBarrierPolicy,
@@ -19,7 +21,8 @@ from repro.sched.policies import (AsyncFLEOPolicy, FedAsyncPolicy,
 from repro.sched.runtime import EventDrivenRuntime, RoundState
 
 __all__ = ["ChannelPool", "ContactPlan", "ContactWindow", "ContentionModel",
-           "Event", "EventKind", "FaultModel",
+           "Event", "EventKind", "FaultModel", "OutageSchedule",
+           "EnergyState",
            "EventQueue", "AsyncFLEOPolicy", "SyncBarrierPolicy",
            "FedAsyncPolicy", "POLICIES", "make_policy",
            "RingHandoff", "NextContactHandoff", "HANDOFF_POLICIES",

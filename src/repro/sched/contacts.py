@@ -462,3 +462,24 @@ class ContactPlan:
             starts = self.contention.grant_rx_many(hap[idx], req, t_t)
             out[idx] += starts - req
         return out, hap
+
+    def reroute_times(self, ps_from: int, ps_to: int, t: float,
+                      bits: float, avoid=()) -> float:
+        """Ring-failover re-timing (DESIGN.md §11): a model that reached
+        the ring at ``ps_from`` at instant ``t`` but found its sink dark
+        relays along the ring to the live PS ``ps_to`` (routing around
+        the ``avoid`` set, +inf when both arcs are blocked) and is
+        charged one fresh rx-channel grant there, under the same §9
+        convention as ``uplink_times``: the PS receives over the
+        [arrival - transmission, arrival) interval, and a queued grant
+        shifts the arrival by (start - request) — exactly 0.0 when
+        uncontended, so ``ps_channels=None`` stays bit-identical."""
+        delay = self.prop.ring_relay_delay(bits, ps_from, ps_to, t,
+                                           avoid=avoid)
+        ta = float(t) + float(delay)
+        if self.contention is not None and np.isfinite(ta):
+            t_t = self.prop.link.transmission_delay(bits)
+            req = ta - t_t
+            start = self.contention.grant_rx(ps_to, req, t_t)
+            ta += start - req
+        return ta

@@ -1,6 +1,6 @@
 """Discrete-event primitives for the async FL runtime (DESIGN.md §7-§8).
 
-Five event kinds drive a federated round (FLGo's ``system_simulator``
+Seven event kinds drive a federated round (FLGo's ``system_simulator``
 separates virtual-clock state the same way):
 
 * ``TRAIN_DONE``     — a satellite finished its J local iterations;
@@ -18,7 +18,13 @@ separates virtual-clock state the same way):
   arrival instant; the handler re-times the retransmission with
   exponential backoff through the contact plan (a fresh rx-channel
   grant) up to ``FaultModel.max_retries`` attempts, then drops the
-  update.  ``attempt`` counts the failures so far in the chain.
+  update.  ``attempt`` counts the failures so far in the chain;
+* ``PS_DOWN`` / ``PS_UP`` — a parameter server enters / leaves a
+  FaultModel outage window (DESIGN.md §11).  ``ps`` names the server;
+  ``round_idx`` is -1 (outages are not addressed to a round).  PS_DOWN
+  triggers ring failover of every open round sunk at the dead PS; the
+  schedule itself is queried purely (``OutageSchedule``), so PS_UP is
+  telemetry plus a wake-up point for deferred work.
 
 Every event carries the ``round_idx`` it is addressed to, so with
 several rounds in flight a ``MODEL_ARRIVAL`` always commits into the
@@ -45,6 +51,8 @@ class EventKind(enum.IntEnum):
     TRIGGER_TIMEOUT = 2
     SINK_HANDOFF = 3
     TRANSFER_FAILED = 4
+    PS_DOWN = 5
+    PS_UP = 6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +72,11 @@ class Event:
     # failed attempts so far in a lossy-transfer retry chain: attempt=k
     # on MODEL_ARRIVAL / TRANSFER_FAILED means this is retransmission k
     attempt: int = 0
+    # the PS this event is addressed to: the outage server on
+    # PS_DOWN/PS_UP, the sink the arrival was *timed against* on
+    # MODEL_ARRIVAL/TRANSFER_FAILED (so a pop can detect "timed to a
+    # now-dead sink" and reroute, DESIGN.md §11); -1 where not applicable
+    ps: int = -1
 
     def __post_init__(self):
         assert self.time == self.time, "event time must not be NaN"

@@ -39,6 +39,13 @@ fires (DESIGN.md §8 handoff contract):
   never).  The default is the round's first expected arrival: by then
   the fastest satellites are done training and the constellation can
   absorb the next downlink while the current collection window runs.
+* ``failover_sink(rt, rnd, t) -> int | None`` — the replacement sink for
+  an open round whose sink PS just went dark (a PS_DOWN event,
+  DESIGN.md §11).  ``RingHandoff`` picks the nearest live ring PS;
+  ``NextContactHandoff`` prefers the live PS with the earliest upcoming
+  satellite contact (least-rx-busy tiebreak).  None = every PS is dark;
+  the round keeps its sink and its arrivals hold at the ring edge until
+  a recovery.
 
 Policies are selected from the strategy table (`fl/strategies.py`):
 ``StrategySpec.sched_policy`` names the trigger policy (sync strategies
@@ -282,6 +289,11 @@ class RingHandoff:
         # window runs concurrently with the next downlink
         return rnd.expected[0][0] if rnd.expected else None
 
+    def failover_sink(self, rt, rnd, t: float) -> Optional[int]:
+        # PS outage failover (DESIGN.md §11): the nearest live ring PS
+        # takes over collection; None when every PS is dark
+        return rt._next_live_ps(rnd.sink, t)
+
 
 @dataclasses.dataclass
 class NextContactHandoff(RingHandoff):
@@ -324,6 +336,23 @@ class NextContactHandoff(RingHandoff):
         else:
             sink = source
         return source, sink
+
+    def failover_sink(self, rt, rnd, t: float) -> Optional[int]:
+        # among LIVE PSs (excluding the dead sink), prefer the one whose
+        # next satellite contact comes earliest — it can resume
+        # collecting soonest — with the §9 least-rx-busy tiebreak; falls
+        # back to the ring nearest-live rule when no live PS has a
+        # finite upcoming contact
+        o = rt._outages
+        tv = rt.plan.next_contact_by_node(t)
+        live = [p for p in range(len(tv))
+                if p != rnd.sink and not o.down_at(p, t)
+                and np.isfinite(tv[p])]
+        if not live:
+            return RingHandoff.failover_sink(self, rt, rnd, t)
+        best = min(tv[p] for p in live)
+        cands = [p for p in live if tv[p] == best]
+        return self._least_busy(rt, cands, t, "rx")
 
 
 HANDOFF_POLICIES = {

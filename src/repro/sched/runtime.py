@@ -69,6 +69,34 @@ shrinks the round's expected set, and the trigger policy's
 transfers that will never land.  ``fault_model=None`` (default) skips
 every check — bit-identical to the fault-free runtime.
 
+**Degradation & recovery** (DESIGN.md §11): the FaultModel's §11 axes
+extend the runtime with recovery semantics.  *PS outages*: the compiled
+`OutageSchedule` (masked into the visibility grid at construction)
+schedules a PS_DOWN/PS_UP event pair per dark window; PS_DOWN fails
+over every open round sunk at the dead PS to the handoff policy's
+replacement (ring-next-live by default), and an in-flight MODEL_ARRIVAL
+that pops at a sink dark at its arrival instant re-routes along the HAP
+ring to the next live PS — re-timed by the ring relay delay and charged
+a fresh §9 rx grant (snapshot/restore rollback on infeasible re-times).
+During a *total* outage, arrivals hold at the ring edge until the first
+recovery, round opens and triggers defer to it, and a trigger with no
+recovery inside the horizon commits anyway (the horizon clamp) so
+starved rounds terminate instead of hanging.  *Energy budgets*: per-sat
+`EnergyState` batteries drain at recruitment (training energy) and at
+every transmit attempt; a depleted satellite defers its uplink to the
+first affordable instant (or drops past the horizon), and retries pay
+transmit energy too.  *Adaptive backoff*: with
+``FaultModel.adaptive_backoff`` the retry delay is AIMD — additive
+increase on each failure scaled by the sink rx pool's observed mean
+queue wait (capped at ``retry_backoff_cap_s``), halved on a successful
+retry — replacing the blind exponential; chosen delays land in
+``stats["backoff_delays_s"]``.  A conservation ledger
+(``arrivals_expected`` / ``arrivals_committed`` + the ``dropped_*``
+counters) pins that every expected arrival is committed, dropped, or
+still pending — across reroutes, deferrals and retries
+(tests/test_property.py).  Every §11 axis at its default attaches no
+state and is bit-identical to the §10 runtime.
+
 The runtime owns no model math: it drives `FLSimulation._fused_commit`
 (the epoch loop's post-trigger tail), so under the AsyncFLEO policy its
 aggregation instants, weights and dispatch counts are *identical* to the
@@ -106,6 +134,11 @@ class RoundState:
     committed: bool = False         # fused training dispatch consumed
     closed: bool = False            # roles handed off; ignore stale events
     group_first: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # the sink the round's arrival times were computed against at open —
+    # ``sink`` may fail over to a live PS mid-flight (DESIGN.md §11),
+    # but already-timed arrivals stay addressed here and reroute lazily
+    # at their pop instant when this PS is (still) dark
+    open_sink: int = -1
 
 
 class EventDrivenRuntime:
@@ -143,7 +176,14 @@ class EventDrivenRuntime:
         # fault layer (DESIGN.md §10): the FaultModel lives on the
         # simulation config; None short-circuits every check
         self.fault = getattr(fls, "fault", None)
-        self.stats: Dict[str, int] = {
+        # compiled PS outage schedule (DESIGN.md §11); None without any
+        # outage config — not a single query is made
+        self._outages = getattr(fls, "_outages", None)
+        # per-sat battery state ((re)built in run()); None = energy off
+        self.energy = None
+        # AIMD retry-delay state for FaultModel.adaptive_backoff
+        self._retry_delay_s = 0.0
+        self.stats: Dict = {
             "rounds_opened": 0, "max_rounds_in_flight": 0,
             "pipelined_opens": 0, "cross_round_adoptions": 0,
             "closed_round_arrivals": 0,
@@ -154,7 +194,26 @@ class EventDrivenRuntime:
             # contention-shrunk trigger windows
             "transfers_failed": 0, "transfer_retries": 0,
             "dropped_after_max_retries": 0, "dropped_unreachable": 0,
-            "shrunk_windows": 0}
+            "shrunk_windows": 0,
+            # outage / failover telemetry (DESIGN.md §11): arrivals
+            # rerouted off a dark sink, sink role failovers of open
+            # rounds, updates dropped because no PS recovered inside the
+            # horizon, and opens/triggers/arrivals deferred to a recovery
+            "rerouted_arrivals": 0, "sink_failovers": 0,
+            "dropped_outage": 0, "outage_deferrals": 0,
+            # energy telemetry (§11): deferred uplinks, recruits skipped
+            # for an empty battery, updates dropped as never affordable
+            "energy_deferrals": 0, "energy_skipped_recruits": 0,
+            "dropped_energy": 0,
+            # fault-aware participant selection skips (§11)
+            "fault_aware_skips": 0,
+            # conservation ledger (§11): every expected arrival ends up
+            # committed (used or adopted-from-carry), in a dropped_*
+            # bucket, or still pending at run end — tests/test_property.py
+            # pins the identity across reroute/defer/retry paths
+            "arrivals_expected": 0, "arrivals_committed": 0,
+            # AIMD backoff delays actually applied (adaptive_backoff)
+            "backoff_delays_s": []}
 
     # ---- lifecycle ---------------------------------------------------------
 
@@ -177,6 +236,21 @@ class EventDrivenRuntime:
         self.beta = 0
         self._stop = False
         self._busy_until[:] = 0.0
+        self._retry_delay_s = (float(self.fault.retry_backoff_s)
+                               if self.fault is not None else 0.0)
+        if self.fault is not None and self.fault.has_energy:
+            # fresh battery state per run (mirrors _init_run's pool reset)
+            from repro.sched.faults import EnergyState
+            self.energy = EnergyState(self.fault, self.plan.num_sats)
+        if self._outages is not None:
+            # one PS_DOWN / PS_UP pair per dark window (DESIGN.md §11);
+            # recovery decisions query the pure schedule, so these events
+            # carry the *reactive* semantics (failover sweeps) + telemetry
+            for p, s, e in self._outages.events():
+                if s < self.sim.duration_s:
+                    self.events.push(Event(s, EventKind.PS_DOWN, -1, ps=p))
+                if e < self.sim.duration_s:
+                    self.events.push(Event(e, EventKind.PS_UP, -1, ps=p))
         self._start_round(0.0, source=0)
         handlers = {
             EventKind.TRAIN_DONE: self._on_train_done,
@@ -184,6 +258,8 @@ class EventDrivenRuntime:
             EventKind.TRIGGER_TIMEOUT: self._on_trigger,
             EventKind.SINK_HANDOFF: self._on_handoff,
             EventKind.TRANSFER_FAILED: self._on_transfer_failed,
+            EventKind.PS_DOWN: self._on_ps_down,
+            EventKind.PS_UP: self._on_ps_up,
         }
         while self.events and not self._stop:
             ev = self.events.pop()
@@ -224,11 +300,31 @@ class EventDrivenRuntime:
             return None
         if sink is None:
             sink = fls.topo.sink_of(source)
+        if self._outages is not None:
+            # PS roles must be live at open (DESIGN.md §11): a dark
+            # source/sink is replaced by the nearest live ring PS; with
+            # EVERY PS dark the open defers to the first recovery (a
+            # round_idx=-1 SINK_HANDOFF that _on_handoff restarts)
+            if self._outages.down_at(source, t):
+                alt = self._next_live_ps(source, t)
+                if alt is None:
+                    t_up = self._outages.next_any_up(t)
+                    if t < t_up < sim.duration_s:
+                        self.stats["outage_deferrals"] += 1
+                        self.events.push(Event(t_up, EventKind.SINK_HANDOFF,
+                                               -1, sat=source,
+                                               pipelined=pipelined))
+                    return None
+                source = alt
+            if self._outages.down_at(sink, t):
+                alt = self._next_live_ps(sink, t)
+                sink = alt if alt is not None else source
         # timing a round consumes channel grants when a ContentionModel is
         # attached (DESIGN.md §9); if the open aborts below, roll the
         # grants back so a round that never ran leaves no occupancy behind
         ctn = self.plan.contention
         snap = ctn.snapshot() if ctn is not None else None
+        esnap = self.energy.snapshot() if self.energy is not None else None
         with fls._seg("timing"):
             recv = fls._downlink(t, self.bits, source)
         participants = [s for s in range(self.plan.num_sats)
@@ -240,6 +336,39 @@ class EventDrivenRuntime:
             # loop's recruit-everyone semantics for parity)
             participants = [s for s in participants
                             if self._busy_until[s] <= recv[s]]
+        if (participants and self.fault is not None
+                and getattr(self.spec, "fault_aware_selection", False)):
+            # fault-aware participant selection (DESIGN.md §11): skip
+            # satellites whose eclipse covers the expected uplink
+            # instant, or whose uplink would land in a total PS outage —
+            # the model would only wait out the dark window anyway
+            fm = self.fault
+            tt = np.broadcast_to(
+                np.asarray(fls._train_times(participants), np.float64),
+                (len(participants),))
+            keep = []
+            for k, s in enumerate(participants):
+                t_up = float(recv[s]) + float(tt[k])
+                ok = fm.sat_available_at(s, t_up, self.plan.num_sats)
+                if ok and self._outages is not None:
+                    ok = not self._outages.all_down_at(t_up)
+                if ok:
+                    keep.append(s)
+                else:
+                    self.stats["fault_aware_skips"] += 1
+            participants = keep
+        if self.energy is not None and participants:
+            # training costs energy at the recruit's receive instant
+            # (DESIGN.md §11): a satellite that cannot afford it sits the
+            # round out and recharges instead
+            keep = []
+            for s in participants:
+                if self.energy.try_drain(s, float(recv[s]),
+                                         self.energy.train_j):
+                    keep.append(s)
+                else:
+                    self.stats["energy_skipped_recruits"] += 1
+            participants = keep
         ids_np = np.zeros(0, np.int32)
         expected: List[tuple] = []
         arr_time: Dict[int, float] = {}
@@ -254,17 +383,23 @@ class EventDrivenRuntime:
         if pipelined and not expected:
             if snap is not None:
                 ctn.restore(snap)
+            if esnap is not None:
+                self.energy.restore(esnap)
             return None     # nobody free to train: the retry in
             #                 _on_handoff (or the close handoff) covers it
         if not expected and not fls._pend_meta:
             if snap is not None:
                 ctn.restore(snap)
+            if esnap is not None:
+                self.energy.restore(esnap)
             return None                     # constellation drained: halt
         rnd = RoundState(self._round_seq, self.beta, t, source, sink,
                          participants, ids_np, expected, arr_time)
+        rnd.open_sink = sink
         self._round_seq += 1
         self.rounds[rnd.idx] = rnd
         self.stats["rounds_opened"] += 1
+        self.stats["arrivals_expected"] += len(expected)
         self.stats["pipelined_opens"] += int(pipelined)
         self.stats["max_rounds_in_flight"] = max(
             self.stats["max_rounds_in_flight"], self._open_count())
@@ -297,20 +432,39 @@ class EventDrivenRuntime:
         ta = rnd.arr_time.get(ev.row)
         if ta is None or not np.isfinite(ta):
             return
+        if self.energy is not None and not self.energy.try_drain(
+                ev.sat, ev.time, self.energy.tx_j):
+            # depleted battery: the uplink defers to the first affordable
+            # instant instead of transmitting now (DESIGN.md §11)
+            self._defer_uplink(rnd, ev, ta)
+            return
         fm = self.fault
-        if (fm is not None and fm.loss_prob > 0.0
-                and fm.transfer_fails(ev.sat, rnd.idx, 0)):
+        if (fm is not None and fm.has_loss
+                and fm.transfer_fails(ev.sat, rnd.idx, 0,
+                                      ps=rnd.open_sink, t=ta)):
             # the transfer is lost in flight: the failure surfaces at the
             # would-be arrival instant (the sink notices a missing /
             # corrupt update only when it was due), DESIGN.md §10
             self.events.push(Event(ta, EventKind.TRANSFER_FAILED, rnd.idx,
-                                   sat=ev.sat, row=ev.row))
+                                   sat=ev.sat, row=ev.row, ps=rnd.open_sink))
             return
         self.events.push(Event(ta, EventKind.MODEL_ARRIVAL, rnd.idx,
-                               sat=ev.sat, row=ev.row))
+                               sat=ev.sat, row=ev.row, ps=rnd.open_sink))
 
     def _on_arrival(self, ev: Event) -> None:
         rnd = self.rounds[ev.round_idx]
+        if (self._outages is not None and ev.ps >= 0
+                and self._outages.down_at(ev.ps, ev.time)):
+            # the sink this arrival was timed against is dark at the
+            # arrival instant: ring failover (DESIGN.md §11)
+            self._reroute_arrival(rnd, ev)
+            return
+        fm = self.fault
+        if ev.attempt > 0 and fm is not None and fm.adaptive_backoff:
+            # AIMD multiplicative decrease: a retry landed, halve the
+            # delay back toward the base (DESIGN.md §11)
+            self._retry_delay_s = max(fm.retry_backoff_s,
+                                      self._retry_delay_s / 2.0)
         if rnd.closed:
             # the round committed before this model landed: its row was
             # carried over (device-resident) at commit time and re-enters
@@ -328,6 +482,18 @@ class EventDrivenRuntime:
         rnd = self.rounds[ev.round_idx]
         if rnd.closed:
             return              # duplicate deadline (barrier already fired)
+        if self._outages is not None and self._outages.all_down_at(ev.time):
+            # no PS can aggregate right now: push the trigger to the
+            # first recovery — or, when no PS recovers inside the
+            # horizon, fall through and commit anyway so a starved round
+            # terminates (the total-outage horizon clamp, DESIGN.md §11)
+            t_up = self._outages.next_any_up(ev.time)
+            if ev.time < t_up < self.sim.duration_s:
+                self.stats["outage_deferrals"] += 1
+                rnd.trigger_scheduled = t_up
+                self.events.push(Event(t_up, EventKind.TRIGGER_TIMEOUT,
+                                       rnd.idx))
+                return
         t_agg, used, late = self.policy.split(self, rnd, ev.time)
         pend = [ta for (ta, _s, _ep) in self.fls._pend_meta]
         if not used and not any(ta <= t_agg for ta in pend):
@@ -356,6 +522,125 @@ class EventDrivenRuntime:
             self._maybe_close(rnd, ev.time)    # spurious: nothing to commit
             return
         self._commit(rnd, t_agg, used, late)
+
+    # ---- outages, failover & energy (DESIGN.md §11) ------------------------
+
+    def _next_live_ps(self, ps: int, t: float) -> Optional[int]:
+        """Nearest live PS on the HAP ring at instant ``t``, by ring
+        distance from ``ps`` (ties toward increasing id, matching
+        ``Topology.ring_path``); None when every PS is dark."""
+        H = self.fls.topo.num_ps
+        for d in sorted(range(1, H), key=lambda d: (min(d, H - d), d)):
+            cand = (ps + d) % H
+            if not self._outages.down_at(cand, t):
+                return cand
+        return None
+
+    def _on_ps_down(self, ev: Event) -> None:
+        # reactive failover sweep: every open round sunk at the dead PS
+        # asks its handoff policy for a live replacement sink; arrivals
+        # already timed against the old sink reroute lazily at pop time
+        for rnd in self.rounds.values():
+            if rnd.closed or rnd.sink != ev.ps:
+                continue
+            new_sink = self.handoff.failover_sink(self, rnd, ev.time)
+            if new_sink is not None and new_sink != rnd.sink:
+                rnd.sink = new_sink
+                self.stats["sink_failovers"] += 1
+
+    def _on_ps_up(self, ev: Event) -> None:
+        # recovery needs no sweep: deferred opens/triggers/arrivals were
+        # re-scheduled at this instant when they hit the outage, and
+        # every outage decision queries the pure OutageSchedule — the
+        # event marks the trace-visible recovery boundary
+        pass
+
+    def _reroute_arrival(self, rnd: RoundState, ev: Event) -> None:
+        """An arrival popped at a sink that is dark at its arrival
+        instant: relay it along the HAP ring to the next live PS
+        (DESIGN.md §11) — re-timed by the ring relay delay and charged a
+        fresh §9 rx grant — or hold it at the ring edge until the first
+        recovery when EVERY PS is dark (dropping only when none recovers
+        inside the horizon)."""
+        o = self._outages
+        loc = self._locate_transfer(rnd, ev.row, ev.sat, ev.time)
+        if loc is None:
+            return          # adopted by a same-instant commit: moot
+        if not o.down_at(rnd.sink, ev.time):
+            target = rnd.sink       # the round already failed over there
+        else:
+            target = self._next_live_ps(ev.ps, ev.time)
+        if target is None:
+            # total outage: hold until the first recovery, then re-check
+            t_up = o.next_any_up(ev.time)
+            if not ev.time < t_up < self.sim.duration_s:
+                self.stats["dropped_outage"] += 1
+                self._retire_transfer(rnd, loc, ev.row, ev.time)
+                return
+            self.stats["outage_deferrals"] += 1
+            self._move_transfer(rnd, loc, ev.row, ev.sat, t_up)
+            self.events.push(Event(t_up, EventKind.MODEL_ARRIVAL, rnd.idx,
+                                   sat=ev.sat, row=ev.row,
+                                   attempt=ev.attempt, ps=ev.ps))
+            return
+        ctn = self.plan.contention
+        snap = ctn.snapshot() if ctn is not None else None
+        with self.fls._seg("timing"):
+            new_ta = self.plan.reroute_times(
+                ev.ps, target, ev.time, self.bits,
+                avoid=o.down_set(ev.time) - {ev.ps, target})
+        if not np.isfinite(new_ta) or new_ta >= self.sim.duration_s:
+            # both ring arcs blocked by other dark PSs, or the relay
+            # lands past the horizon: roll the grant back and drop
+            if snap is not None:
+                ctn.restore(snap)
+            self.stats["dropped_outage"] += 1
+            self._retire_transfer(rnd, loc, ev.row, ev.time)
+            return
+        self.stats["rerouted_arrivals"] += 1
+        self._move_transfer(rnd, loc, ev.row, ev.sat, new_ta)
+        self.events.push(Event(new_ta, EventKind.MODEL_ARRIVAL, rnd.idx,
+                               sat=ev.sat, row=ev.row,
+                               attempt=ev.attempt, ps=target))
+
+    def _defer_uplink(self, rnd: RoundState, ev: Event,
+                      ta_old: float) -> None:
+        """A depleted satellite's uplink waits for its battery: re-time
+        the transfer from the first instant the transmit energy is
+        affordable, or drop it when that never happens inside the
+        horizon (DESIGN.md §11)."""
+        en = self.energy
+        loc = self._locate_transfer(rnd, ev.row, ev.sat, ta_old)
+        if loc is None:
+            return
+        t_aff = en.time_to_afford(ev.sat, ev.time, en.tx_j)
+        if t_aff is None or t_aff >= self.sim.duration_s:
+            self.stats["dropped_energy"] += 1
+            self._retire_transfer(rnd, loc, ev.row, ev.time)
+            return
+        ctn = self.plan.contention
+        snap = ctn.snapshot() if ctn is not None else None
+        with self.fls._seg("timing"):
+            t_arr, _haps = self.plan.uplink_times(
+                [ev.sat], [t_aff], self.bits, rnd.sink)
+        new_ta = float(t_arr[0])
+        if not np.isfinite(new_ta) or new_ta >= self.sim.duration_s:
+            if snap is not None:
+                ctn.restore(snap)
+            self.stats["dropped_energy"] += 1
+            self._retire_transfer(rnd, loc, ev.row, ev.time)
+            return
+        en.try_drain(ev.sat, t_aff, en.tx_j)    # affordable by construction
+        self.stats["energy_deferrals"] += 1
+        self._move_transfer(rnd, loc, ev.row, ev.sat, new_ta)
+        fm = self.fault
+        kind = (EventKind.TRANSFER_FAILED
+                if (fm.has_loss
+                    and fm.transfer_fails(ev.sat, rnd.idx, 0,
+                                          ps=rnd.sink, t=new_ta))
+                else EventKind.MODEL_ARRIVAL)
+        self.events.push(Event(new_ta, kind, rnd.idx, sat=ev.sat,
+                               row=ev.row, ps=rnd.sink))
 
     # ---- lossy transfers: retry / backoff / drop (DESIGN.md §10) -----------
 
@@ -424,7 +709,32 @@ class EventDrivenRuntime:
         snap = None
         ctn = self.plan.contention
         if attempt <= fm.max_retries:
-            t_retry = ev.time + fm.retry_delay_s(ev.attempt)
+            if fm.adaptive_backoff:
+                # AIMD additive increase (DESIGN.md §11): the step is the
+                # sink rx pool's observed mean queue wait (at least the
+                # configured base), capped at retry_backoff_cap_s; the
+                # applied delays land in stats["backoff_delays_s"]
+                delay = self._retry_delay_s
+                wait = 0.0
+                if ctn is not None and ctn.rx.grants:
+                    wait = ctn.rx.queue_wait_s / ctn.rx.grants
+                self._retry_delay_s = min(
+                    fm.retry_backoff_cap_s,
+                    self._retry_delay_s + max(fm.retry_backoff_s, wait))
+                self.stats["backoff_delays_s"].append(float(delay))
+            else:
+                delay = fm.retry_delay_s(ev.attempt)
+            t_retry = ev.time + delay
+            if self.energy is not None:
+                # retransmissions pay transmit energy too: wait for the
+                # battery when depleted, drop when it never recovers
+                t_aff = self.energy.time_to_afford(ev.sat, t_retry,
+                                                   self.energy.tx_j)
+                if t_aff is None:
+                    self.stats["dropped_energy"] += 1
+                    self._retire_transfer(rnd, loc, ev.row, ev.time)
+                    return
+                t_retry = max(t_retry, t_aff)
             if t_retry < self.sim.duration_s:
                 # the retransmission re-enters the shared channel pools: a
                 # fresh uplink (and rx grant) from the backoff instant
@@ -448,17 +758,28 @@ class EventDrivenRuntime:
             self._retire_transfer(rnd, loc, ev.row, ev.time)
             return
         self.stats["transfer_retries"] += 1
+        if self.energy is not None:
+            self.energy.try_drain(ev.sat, t_retry, self.energy.tx_j)
         self._move_transfer(rnd, loc, ev.row, ev.sat, new_ta)
         kind = (EventKind.TRANSFER_FAILED
-                if fm.transfer_fails(ev.sat, rnd.idx, attempt)
+                if fm.transfer_fails(ev.sat, rnd.idx, attempt,
+                                     ps=rnd.sink, t=new_ta)
                 else EventKind.MODEL_ARRIVAL)
         self.events.push(Event(new_ta, kind, rnd.idx, sat=ev.sat,
-                               row=ev.row, attempt=attempt))
+                               row=ev.row, attempt=attempt, ps=rnd.sink))
 
     def _on_handoff(self, ev: Event) -> None:
         # the round stays registered: stale TRAIN_DONE / MODEL_ARRIVAL
         # events for it may still be queued and look their round up
-        rnd = self.rounds[ev.round_idx]
+        rnd = self.rounds.get(ev.round_idx)
+        if rnd is None:
+            # a round open deferred through a total PS outage
+            # (DESIGN.md §11, round_idx=-1): restart it from the recorded
+            # source at the recovery instant
+            if self._open_count() < self.max_in_flight:
+                self._start_round(ev.time, max(ev.sat, 0),
+                                  pipelined=ev.pipelined)
+            return
         if self._open_count() >= self.max_in_flight:
             return              # pipeline full; a close will refill it
         source, sink = self.handoff.next_round(self, rnd, ev.time)
@@ -481,12 +802,18 @@ class EventDrivenRuntime:
         fls, spec = self.fls, self.spec
         participants = rnd.participants if not rnd.committed else []
         ids_np = rnd.ids_np if not rnd.committed else np.zeros(0, np.int32)
-        # adoption telemetry: only stragglers that originated in ANOTHER
-        # round (FedAsync drains its own round's carried rows — epoch
-        # stamp equal to rnd.beta — which is not a round boundary)
-        self.stats["cross_round_adoptions"] += sum(
-            1 for (ta, _s, ep) in fls._pend_meta
-            if ta <= t_agg and ep != rnd.beta)
+        # adoption telemetry: cross_round counts only stragglers that
+        # originated in ANOTHER round (FedAsync drains its own round's
+        # carried rows — epoch stamp equal to rnd.beta — which is not a
+        # round boundary); the total adopted count feeds the §11
+        # conservation ledger alongside the rows used directly
+        adopted = cross = 0
+        for (ta, _s, ep) in fls._pend_meta:
+            if ta <= t_agg:
+                adopted += 1
+                cross += int(ep != rnd.beta)
+        self.stats["cross_round_adoptions"] += cross
+        self.stats["arrivals_committed"] += len(used) + adopted
         out = fls._fused_commit(self.prog, self.beta, ids_np, participants,
                                 t_agg, used, late, train_epoch=rnd.beta)
         rnd.committed = True

@@ -10,6 +10,15 @@ lossy transfers with bounded retry/backoff (retry telemetry, drop after
 max retries, termination under total loss, barrier rescue on drops, the
 epoch loop refusing loss), the staleness zoo's eq13-default parity, and
 the contention-aware trigger-window shrink.
+
+The §11 degradation-and-recovery axes (DESIGN.md §11): Gilbert–Elliott
+burst loss (off-switch draw parity, window correlation, long-run rate),
+PS outage schedules (compile/merge/point queries, grid masking,
+end-to-end ring failover with rerouted arrivals, the total-outage
+horizon clamp), per-sat energy budgets (closed-form battery unit tests,
+deferred uplinks, skipped recruits, the never-binding-budget parity),
+fault-aware participant selection (default-off parity) and AIMD
+adaptive retry backoff (delays surfaced in runtime.stats, capped).
 """
 import dataclasses
 from types import SimpleNamespace
@@ -24,7 +33,8 @@ from repro.core.aggregation import (SatelliteMeta, STALENESS_FNS,
 from repro.core.links import LinkModel
 from repro.fl import get_strategy
 from repro.fl.strategies import StrategySpec, _STALENESS_FNS
-from repro.sched import EventDrivenRuntime, FaultModel
+from repro.sched import (EnergyState, EventDrivenRuntime, FaultModel,
+                         OutageSchedule)
 from repro.sched.policies import AsyncFLEOPolicy, make_policy
 
 from test_epoch_step import TinyFusedTrainer, W0
@@ -55,6 +65,15 @@ def _rows(hist):
     dict(eclipse_fraction=1.0), dict(eclipse_fraction=-0.2),
     dict(eclipse_period_s=0.0), dict(compute_rate_spread=-1.0),
     dict(compute_rates=()), dict(compute_rates=(1.0, 0.0)),
+    # §11 axes
+    dict(burst_len_s=-1.0), dict(loss_prob_bad=1.5),
+    dict(loss_prob_good=-0.1),
+    dict(ps_outages=((0, 10.0, 5.0),)), dict(ps_outages=((0, -1.0, 5.0),)),
+    dict(ps_outages=((-1, 0.0, 5.0),)), dict(ps_outages=("bad",)),
+    dict(ps_outage_fraction=1.0), dict(ps_outage_period_s=0.0),
+    dict(battery_j=0.0), dict(train_energy_j=-1.0), dict(tx_energy_j=-1.0),
+    dict(recharge_w=-0.5), dict(initial_charge=1.5),
+    dict(retry_backoff_cap_s=10.0),      # below retry_backoff_s
 ])
 def test_fault_model_validation(kw):
     with pytest.raises(ValueError):
@@ -193,9 +212,13 @@ def test_train_time_scale_shapes():
     np.testing.assert_array_equal(s, fm.train_time_scale(40))  # seeded
     assert FaultModel(compute_rate_spread=0.0).train_time_scale(40) is None
     ex = FaultModel(compute_rates=(1.0, 2.0, 3.0))
-    np.testing.assert_array_equal(ex.train_time_scale(2), [1.0, 2.0])
+    np.testing.assert_array_equal(ex.train_time_scale(3), [1.0, 2.0, 3.0])
+    # a length mismatch raises in BOTH directions — a longer table used
+    # to silently truncate, masking a mis-sized scenario
     with pytest.raises(ValueError):
         ex.train_time_scale(5)           # fewer rates than satellites
+    with pytest.raises(ValueError):
+        ex.train_time_scale(2)           # more rates than satellites
 
 
 def test_compute_spread_changes_timing_keeps_driver_parity():
@@ -374,3 +397,249 @@ def test_window_shrink_end_to_end():
     assert len(ht) == 4
     assert rt.stats["shrunk_windows"] > 0
     assert ht[0].time_s <= hb[0].time_s    # first window can only shrink
+
+
+# ---- correlated / bursty loss (Gilbert–Elliott, §11) ------------------------
+
+def test_burst_off_switch_keeps_iid_draws():
+    """burst_len_s=0 (the default) keeps the i.i.d. key: ps/t are
+    ignored, so the schedule is byte-identical to the historical 3-arg
+    call regardless of where or when the attempt happens."""
+    fm = FaultModel(loss_prob=0.4)
+    assert not fm.has_burst and fm.has_loss
+    for s in range(6):
+        for r in range(3):
+            for a in range(3):
+                assert (fm.transfer_fails(s, r, a)
+                        == fm.transfer_fails(s, r, a, ps=1, t=43210.9))
+
+
+def test_burst_windows_correlate_failures():
+    fm = FaultModel(loss_prob=0.3, burst_len_s=600.0)
+    assert fm.has_burst and fm.has_loss and not fm.is_null
+    # window state is a pure keyed draw: constant inside one window,
+    # identical on re-query (independent of query order)
+    assert (fm.in_bad_window(0, 0, 0.0) == fm.in_bad_window(0, 0, 100.0)
+            == fm.in_bad_window(0, 0, 599.9))
+    fwd = [fm.in_bad_window(0, 0, w * 600.0) for w in range(50)]
+    rev = [fm.in_bad_window(0, 0, w * 600.0) for w in reversed(range(50))]
+    assert fwd == rev[::-1]
+    # default bad/good probs (1.0 / 0.0): an attempt's fate IS the
+    # window state — retries inside the same burst all fail
+    for t in np.arange(0.0, 30000.0, 137.0):
+        assert fm.transfer_fails(0, 7, 2, ps=0, t=t) == \
+            fm.in_bad_window(0, 0, t)
+    # the long-run bad fraction tracks loss_prob (stationary rate match)
+    bad = np.mean([fm.in_bad_window(s, p, w * 600.0 + 1.0)
+                   for s in range(4) for p in range(2) for w in range(300)])
+    assert abs(bad - 0.3) < 0.04
+    # distinct (sat, ps) links fade independently
+    assert ([fm.in_bad_window(0, 0, w * 600.0) for w in range(100)]
+            != [fm.in_bad_window(0, 1, w * 600.0) for w in range(100)])
+
+
+def test_burst_loss_end_to_end_deterministic():
+    """A bursty channel run commits every epoch, shows failures in the
+    telemetry, and is bit-reproducible (the GE schedule is pure)."""
+    fm = FaultModel(loss_prob=0.3, burst_len_s=1800.0, max_retries=4,
+                    retry_backoff_s=60.0)
+    a = _sim("asyncfleo-twohap", True, fault_model=fm)
+    ra = EventDrivenRuntime(a)
+    ha = ra.run(W0, max_epochs=4)
+    assert len(ha) == 4
+    assert ra.stats["transfers_failed"] > 0
+    b = _sim("asyncfleo-twohap", True, fault_model=fm)
+    rb = EventDrivenRuntime(b)
+    hb = rb.run(W0, max_epochs=4)
+    assert _rows(ha) == _rows(hb)
+    assert ra.stats == rb.stats
+    np.testing.assert_array_equal(np.asarray(a._w_flat),
+                                  np.asarray(b._w_flat))
+
+
+# ---- PS outages & ring failover (§11) ---------------------------------------
+
+def test_outage_schedule_queries():
+    fm = FaultModel(ps_outages=((0, 100.0, 200.0), (0, 150.0, 300.0),
+                                (1, 120.0, 140.0)))
+    assert fm.has_outages and not fm.is_null
+    sched = OutageSchedule(fm.outage_intervals(2, 1000.0), 2)
+    # overlapping intervals merge; events() is the PS_DOWN/PS_UP source
+    assert sched.events() == [(0, 100.0, 300.0), (1, 120.0, 140.0)]
+    # half-open [start, end): down AT start, up again AT end
+    assert sched.down_at(0, 100.0) and sched.down_at(0, 299.9)
+    assert not sched.down_at(0, 99.9) and not sched.down_at(0, 300.0)
+    assert sched.next_up(0, 150.0) == 300.0
+    assert sched.next_up(1, 20.0) == 20.0            # already up
+    assert sched.all_down_at(130.0) and not sched.all_down_at(150.0)
+    assert sched.next_any_up(130.0) == 140.0         # PS 1 recovers first
+    assert sched.down_set(130.0) == {0, 1}
+    # a PS index beyond the topology fails at compile time, like
+    # compute_rates at train_time_scale time
+    with pytest.raises(ValueError):
+        fm.outage_intervals(1, 1000.0)
+    # horizon clipping drops or trims out-of-range windows
+    assert fm.outage_intervals(2, 110.0) == ((0, 100.0, 110.0),)
+
+
+def test_outage_fraction_masks_grid():
+    fm = FaultModel(ps_outage_fraction=0.3)
+    base = _sim("asyncfleo-twohap", True)
+    out = _sim("asyncfleo-twohap", True, fault_model=fm)
+    assert out.timeline.grid.sum() < base.timeline.grid.sum()
+    out2 = _sim("asyncfleo-twohap", True, fault_model=fm)   # seeded
+    np.testing.assert_array_equal(out.timeline.grid, out2.timeline.grid)
+    # the periodic windows keep each PS dark for ~the configured fraction
+    mask = fm.outage_mask(np.arange(0.0, 86400.0, 10.0), 2, 86400.0)
+    np.testing.assert_allclose(mask.mean(axis=0), 0.7, atol=0.02)
+    assert FaultModel().outage_mask(np.zeros(3), 2, 100.0) is None
+
+
+def test_ps_outage_failover_end_to_end():
+    """One of the two ring HAPs dark for a contiguous 30% of the horizon:
+    open rounds fail their sink over to the survivor, arrivals timed
+    against the dark PS reroute along the ring, every epoch still
+    commits, and the whole run is bit-reproducible."""
+    fm = FaultModel(ps_outages=((0, 2000.0, 27920.0),))
+    a = _sim("asyncfleo-twohap", True, fault_model=fm)
+    ra = EventDrivenRuntime(a)
+    ha = ra.run(W0, max_epochs=6)
+    assert len(ha) == 6
+    assert ra.events.counts["PS_DOWN"] == 1
+    assert ra.events.counts["PS_UP"] == 1
+    assert ra.stats["sink_failovers"] > 0      # PS_DOWN swept the open round
+    assert ra.stats["rerouted_arrivals"] > 0   # in-flight arrivals relayed
+    b = _sim("asyncfleo-twohap", True, fault_model=fm)
+    rb = EventDrivenRuntime(b)
+    hb = rb.run(W0, max_epochs=6)
+    assert _rows(ha) == _rows(hb)
+    assert ra.stats == rb.stats
+    np.testing.assert_array_equal(np.asarray(a._w_flat),
+                                  np.asarray(b._w_flat))
+
+
+def test_total_outage_horizon_clamp_commits():
+    """EVERY PS dark through the end of the horizon: deferred triggers
+    can find no recovery inside the run, so the clamp commits the
+    starved rounds anyway and the run terminates."""
+    fm = FaultModel(ps_outages=((0, 40000.0, 86400.0),
+                                (1, 40000.0, 86400.0)))
+    fls = _sim("asyncfleo-twohap", True, fault_model=fm)
+    rt = EventDrivenRuntime(fls)
+    hist = rt.run(W0, max_epochs=6)
+    assert len(hist) >= 1                  # terminated, nothing hangs
+    assert all(np.isfinite(r.time_s) for r in hist)
+
+
+def test_outage_energy_require_event_runtime():
+    """The epoch loop cannot express failover or deferred uplinks; it
+    must refuse instead of silently ignoring the configured axis."""
+    for fm in (FaultModel(ps_outage_fraction=0.2),
+               FaultModel(battery_j=100.0)):
+        fls = _sim("asyncfleo-twohap", False, fault_model=fm)
+        with pytest.raises(ValueError, match="event-driven"):
+            fls.run(W0, max_epochs=2)
+
+
+# ---- energy budgets (§11) ---------------------------------------------------
+
+def test_energy_state_unit():
+    fm = FaultModel(battery_j=100.0, train_energy_j=60.0, tx_energy_j=10.0,
+                    recharge_w=0.5, initial_charge=0.5)
+    assert fm.has_energy and not fm.is_null
+    es = EnergyState(fm, 2)
+    assert es.level(0, 0.0) == pytest.approx(50.0)
+    assert not es.try_drain(0, 0.0, 60.0)            # can't afford yet
+    # deficit 10 J at 0.5 W -> affordable 20 s later (closed form)
+    assert es.time_to_afford(0, 0.0, 60.0) == pytest.approx(20.0)
+    assert es.try_drain(0, 20.0, 60.0)
+    assert es.level(0, 20.0) == pytest.approx(0.0)
+    assert es.time_to_afford(0, 20.0, 200.0) is None  # above capacity
+    assert es.level(1, 1000.0) == pytest.approx(100.0)   # capped at battery_j
+    # snapshot/restore mirrors the §9 channel-pool rollback
+    snap = es.snapshot()
+    assert es.try_drain(1, 1000.0, 10.0)
+    es.restore(snap)
+    assert es.level(1, 1000.0) == pytest.approx(100.0)
+    # zero recharge: a depleted battery never recovers
+    es0 = EnergyState(FaultModel(battery_j=100.0, recharge_w=0.0,
+                                 initial_charge=0.0), 1)
+    assert es0.time_to_afford(0, 0.0, 5.0) is None
+    # eclipse scales the mean-field recharge rate (sunlit duty cycle)
+    ec = EnergyState(FaultModel(battery_j=1.0, recharge_w=2.0,
+                                eclipse_fraction=0.5), 1)
+    assert ec.rate_w == pytest.approx(1.0)
+
+
+def test_energy_budget_defers_and_recovers():
+    """A never-binding battery changes nothing; a tight one forces
+    deferred uplinks / skipped recruits (telemetry) while the run still
+    commits and reproduces."""
+    hb = _sim("asyncfleo-twohap", True).run(W0, max_epochs=4)
+    ample = _sim("asyncfleo-twohap", True,
+                 fault_model=FaultModel(battery_j=1e9))
+    ra = EventDrivenRuntime(ample)
+    ha = ra.run(W0, max_epochs=4)
+    assert _rows(ha) == _rows(hb)
+    assert (ra.stats["energy_deferrals"] + ra.stats["dropped_energy"]
+            + ra.stats["energy_skipped_recruits"]) == 0
+    tight = FaultModel(battery_j=60.0, train_energy_j=50.0, tx_energy_j=20.0,
+                       recharge_w=0.05, initial_charge=1.0)
+    b = _sim("asyncfleo-twohap", True, fault_model=tight)
+    rb = EventDrivenRuntime(b)
+    hbt = rb.run(W0, max_epochs=4)
+    assert len(hbt) >= 1
+    assert (rb.stats["energy_deferrals"] + rb.stats["dropped_energy"]
+            + rb.stats["energy_skipped_recruits"]) > 0
+    c = _sim("asyncfleo-twohap", True, fault_model=tight)
+    rc = EventDrivenRuntime(c)
+    hc = rc.run(W0, max_epochs=4)
+    assert _rows(hbt) == _rows(hc) and rb.stats == rc.stats
+
+
+# ---- fault-aware participant selection (§11, off by default) ----------------
+
+def test_fault_aware_selection_flag():
+    fm = FaultModel(eclipse_fraction=0.4)
+    # off (the default): no recruit is ever skipped for fault forecasts
+    a = _sim("asyncfleo-twohap", True, fault_model=fm)
+    ra = EventDrivenRuntime(a)
+    ha = ra.run(W0, max_epochs=4)
+    assert ra.stats["fault_aware_skips"] == 0
+    # on: recruits whose uplink instant lands in eclipse are skipped
+    b = _sim("asyncfleo-twohap", True, fault_model=fm,
+             spec_kw=dict(fault_aware_selection=True))
+    rb = EventDrivenRuntime(b)
+    hbt = rb.run(W0, max_epochs=4)
+    assert len(hbt) == 4
+    assert rb.stats["fault_aware_skips"] > 0
+    # the flag without a fault model consults nothing: bit-identical
+    base = _sim("asyncfleo-twohap", True).run(W0, max_epochs=4)
+    c = _sim("asyncfleo-twohap", True,
+             spec_kw=dict(fault_aware_selection=True))
+    assert _rows(c.run(W0, max_epochs=4)) == _rows(base)
+
+
+# ---- adaptive retry backoff (AIMD, §11) -------------------------------------
+
+def test_adaptive_backoff_applied_and_capped():
+    fm = FaultModel(loss_prob=0.6, max_retries=6, retry_backoff_s=60.0,
+                    adaptive_backoff=True, retry_backoff_cap_s=240.0)
+    fls = _sim("asyncfleo-twohap", True, fault_model=fm)
+    rt = EventDrivenRuntime(fls)
+    hist = rt.run(W0, max_epochs=4)
+    assert len(hist) == 4
+    delays = rt.stats["backoff_delays_s"]
+    assert delays and rt.stats["transfer_retries"] > 0
+    # every applied delay sits in [base, cap]; additive increase under
+    # sustained loss actually moves it off the base
+    assert min(delays) >= 60.0 and max(delays) <= 240.0
+    assert max(delays) > 60.0
+    # the default (adaptive_backoff=False) keeps the blind exponential:
+    # no delays are recorded at all
+    off = dataclasses.replace(fm, adaptive_backoff=False)
+    fls2 = _sim("asyncfleo-twohap", True, fault_model=off)
+    rt2 = EventDrivenRuntime(fls2)
+    rt2.run(W0, max_epochs=4)
+    assert rt2.stats["backoff_delays_s"] == []
+    assert rt2.stats["transfers_failed"] > 0

@@ -20,8 +20,11 @@ from repro.fl import get_strategy
 from repro.kernels.fed_agg.ops import fed_agg
 from repro.kernels.fed_agg.ref import fed_agg_flat_ref
 from repro.models.scan_ops import chunked_scan, recurrent_scan
+from repro.sched import EventDrivenRuntime, FaultModel, OutageSchedule
 from repro.sched.policies import (AsyncFLEOPolicy, FedAsyncPolicy,
                                   SyncBarrierPolicy)
+
+from test_epoch_step import TinyFusedTrainer, W0
 
 SETTINGS = dict(max_examples=20, deadline=None)
 
@@ -197,3 +200,73 @@ def test_retries_never_double_reserve(ops, snap_at, restore_at, channels):
             assert ivs == sorted(ivs)
             assert all(s < e for s, e in ivs)
             assert all(e0 <= s1 for (_, e0), (s1, _) in zip(ivs, ivs[1:]))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 100),
+       keys=st.lists(st.tuples(st.integers(0, 5),      # sat
+                               st.integers(0, 2),      # ps
+                               st.integers(0, 3),      # round
+                               st.integers(0, 3),      # attempt
+                               st.floats(0.0, 50000.0)),  # t
+                     min_size=1, max_size=40))
+def test_fault_schedules_independent_of_query_order(seed, keys):
+    """The §11 determinism contract: the Gilbert–Elliott channel and the
+    PS outage schedule are pure functions of (seed, ids, time) — query
+    them in any order (the event runtime pops events in time order, but
+    retries/reroutes interleave arbitrarily) and the answers must not
+    change, nor may compiling the schedule twice disagree."""
+    fm = FaultModel(seed=seed, loss_prob=0.4, burst_len_s=900.0,
+                    ps_outage_fraction=0.25, ps_outage_period_s=7200.0)
+    def draw(k):
+        s, p, r, a, t = k
+        return (fm.transfer_fails(s, r, a, ps=p, t=t),
+                fm.in_bad_window(s, p, t))
+    fwd = [draw(k) for k in keys]
+    rev = [draw(k) for k in reversed(keys)]
+    assert fwd == rev[::-1]
+    assert fm.outage_intervals(3, 50000.0) == fm.outage_intervals(3, 50000.0)
+    sched = OutageSchedule(fm.outage_intervals(3, 50000.0), 3)
+    downs = [sched.down_at(p, t) for (_, p, _, _, t) in keys]
+    downs_rev = [sched.down_at(p, t) for (_, p, _, _, t) in reversed(keys)]
+    assert downs == downs_rev[::-1]
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 4),
+       loss=st.sampled_from([0.0, 0.35]),
+       burst=st.sampled_from([0.0, 1800.0]),
+       outage=st.booleans(),
+       energy=st.booleans(),
+       strategy=st.sampled_from(["asyncfleo-twohap", "asyncfleo-pipelined"]))
+def test_arrival_conservation_ledger(seed, loss, burst, outage, energy,
+                                     strategy):
+    """The §11 conservation ledger, across every recovery path at once
+    (loss retries, burst fading, outage reroutes/failover, energy
+    deferrals): every arrival a round ever expected is either committed
+    (used directly or adopted from the carried-straggler set), dropped
+    into exactly one ``dropped_*`` bucket, or still pending when the run
+    ends — nothing leaks, nothing is double-counted.  Holds for the
+    AsyncFLEO trigger policy, whose commits drain carried stragglers
+    exhaustively."""
+    kw = dict(seed=seed, loss_prob=loss, burst_len_s=burst,
+              max_retries=2, retry_backoff_s=120.0)
+    if outage:
+        kw["ps_outages"] = ((0, 2000.0, 20000.0),)
+    if energy:
+        kw.update(battery_j=80.0, train_energy_j=50.0, tx_energy_j=10.0,
+                  recharge_w=0.1)
+    cfg = SimConfig(event_driven=True, duration_s=86400.0,
+                    train_time_s=300.0, use_model_bank=True,
+                    use_fused_step=True, fault_model=FaultModel(**kw))
+    fls = FLSimulation(get_strategy(strategy), TinyFusedTrainer(W0),
+                       None, cfg)
+    rt = EventDrivenRuntime(fls)
+    rt.run(W0, max_epochs=3)
+    s = rt.stats
+    dropped = (s["dropped_after_max_retries"] + s["dropped_unreachable"]
+               + s["dropped_outage"] + s["dropped_energy"])
+    leftover = len(fls._pend_meta) + sum(
+        len(r.expected) for r in rt.rounds.values() if not r.committed)
+    assert s["arrivals_expected"] == (
+        s["arrivals_committed"] + dropped + leftover)
