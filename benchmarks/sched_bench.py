@@ -81,6 +81,9 @@ from repro.core import FLSimulation, SimConfig, convergence_time
 from repro.core.links import LinkModel
 from repro.core.modelbank import FlatSpec, flatten_tree
 from repro.fl.strategies import get_strategy
+from repro.obs import (DispatchProfiler, Tracer, add_runtime_tracks,
+                       export_chrome, export_jsonl, validate_chrome_trace)
+from repro.obs.trace import SPAN_ROUND
 from repro.sched import EventDrivenRuntime
 
 # async vs sync on the same constellation with the SAME PS placement
@@ -173,12 +176,15 @@ class MeanDistanceEvaluator:
         return 1.0 - min(1.0, float(np.mean(np.abs(flat - 1.0))))
 
 
-def bench_policy(name: str, strategy: str, w0, target: float,
-                 max_epochs: int, duration_s: float,
-                 ps_channels: Optional[int] = None,
-                 link: Optional[LinkModel] = None,
-                 fault=None, staleness_fn: str = "eq13",
-                 spec_kw: Optional[Dict] = None) -> Dict:
+def _run_policy(name: str, strategy: str, w0, target: float,
+                max_epochs: int, duration_s: float,
+                ps_channels: Optional[int] = None,
+                link: Optional[LinkModel] = None,
+                fault=None, staleness_fn: str = "eq13",
+                spec_kw: Optional[Dict] = None, tracer=None):
+    """One benched run; returns (row, fls, rt, hist) so callers that
+    need the live objects (the trace smoke cell) share the exact setup
+    the plain rows use."""
     spec = get_strategy(strategy)
     if spec_kw:
         spec = dataclasses.replace(spec, **spec_kw)
@@ -186,9 +192,11 @@ def bench_policy(name: str, strategy: str, w0, target: float,
         spec = dataclasses.replace(spec, ps_channels=ps_channels)
     if staleness_fn != "eq13":
         spec = dataclasses.replace(spec, staleness_fn=staleness_fn)
+    prof = DispatchProfiler()
     sim = SimConfig(duration_s=duration_s, dt_s=30.0, train_time_s=300.0,
                     use_model_bank=True, use_fused_step=True,
-                    event_driven=True, link=link, fault_model=fault)
+                    event_driven=True, link=link, fault_model=fault,
+                    tracer=tracer, profiler=prof)
     fls = FLSimulation(spec, ConvergingTrainer(w0),
                        MeanDistanceEvaluator(), sim)
     rt = EventDrivenRuntime(fls)
@@ -196,7 +204,7 @@ def bench_policy(name: str, strategy: str, w0, target: float,
     hist = rt.run(w0, max_epochs=max_epochs, target_accuracy=target)
     wall = time.perf_counter() - t0
     conv = convergence_time(hist, target)
-    return {
+    row = {
         "policy": name,
         "strategy": strategy,
         "trigger_policy": rt.policy.name,
@@ -241,8 +249,85 @@ def bench_policy(name: str, strategy: str, w0, target: float,
             "adaptive_backoff": fault.adaptive_backoff,
         },
         "wall_s": wall,
+        # reproducibility + wall-clock attribution (DESIGN.md §12): the
+        # RNG seed this row trained under, and where the host time went —
+        # cold trace+compile vs steady-state dispatch (obs/profile.py)
+        "seed": int(sim.seed),
+        "profile": prof.summary(),
         "plan": fls.plan.summary(),
     }
+    return row, fls, rt, hist
+
+
+def bench_policy(name: str, strategy: str, w0, target: float,
+                 max_epochs: int, duration_s: float,
+                 ps_channels: Optional[int] = None,
+                 link: Optional[LinkModel] = None,
+                 fault=None, staleness_fn: str = "eq13",
+                 spec_kw: Optional[Dict] = None) -> Dict:
+    row, _fls, _rt, _hist = _run_policy(
+        name, strategy, w0, target, max_epochs, duration_s,
+        ps_channels=ps_channels, link=link, fault=fault,
+        staleness_fn=staleness_fn, spec_kw=spec_kw)
+    return row
+
+
+def trace_smoke(w0, target: float, max_epochs: int, duration_s: float,
+                trace_out: str) -> Dict:
+    """The observability smoke cell (DESIGN.md §12): run the pipelined
+    AsyncFLEO row twice — once traced, once with ``tracer=None`` — and
+    gate three claims before writing the trace artifact:
+
+    1. **null-tracer bit-parity**: the traced run's history rows and
+       final flat weights are bit-identical to the untraced run's;
+    2. the exported Chrome trace-event JSON passes the schema validator
+       (loads in Perfetto);
+    3. the trace carries >= 1 ``round`` span per committed epoch.
+
+    Writes ``trace_out`` (Chrome JSON, the CI artifact) plus the same
+    buffer as JSONL next to it.  Raises SystemExit on any gate failure.
+    """
+    tracer = Tracer()
+    _rowt, fls_t, rt_t, hist_t = _run_policy(
+        "async_pipelined_traced", "asyncfleo-pipelined", w0, target,
+        max_epochs, duration_s, tracer=tracer)
+    _rowu, fls_u, _rt_u, hist_u = _run_policy(
+        "async_pipelined", "asyncfleo-pipelined", w0, target,
+        max_epochs, duration_s)
+
+    def _rows(h):
+        return [(r.epoch, r.time_s, r.accuracy, r.num_models, r.gamma)
+                for r in h]
+
+    if _rows(hist_t) != _rows(hist_u):
+        raise SystemExit("tracer=None parity broken: traced history "
+                         "differs from the untraced run")
+    wt = np.asarray(fls_t._w_flat)
+    wu = np.asarray(fls_u._w_flat)
+    if wt.tobytes() != wu.tobytes():
+        raise SystemExit("tracer=None parity broken: traced final "
+                         "weights differ bitwise from the untraced run")
+
+    add_runtime_tracks(tracer, rt_t)          # per-PS occupancy/outages
+    obj = export_chrome(tracer, trace_out)
+    errs = validate_chrome_trace(obj)
+    if errs:
+        raise SystemExit("exported trace failed Chrome-trace schema "
+                         "validation: " + "; ".join(errs[:5]))
+    round_spans = sum(1 for s in tracer.spans if s.name == SPAN_ROUND)
+    if round_spans < len(hist_t):
+        raise SystemExit(
+            f"trace coverage broken: {round_spans} round spans for "
+            f"{len(hist_t)} committed epochs")
+    jsonl_out = trace_out.rsplit(".", 1)[0] + ".jsonl"
+    lines = export_jsonl(tracer, jsonl_out)
+    print(f"[trace] parity ok  {len(obj['traceEvents'])} events  "
+          f"{round_spans} round spans / {len(hist_t)} epochs  "
+          f"-> {trace_out} (+{jsonl_out}, {lines} lines)")
+    return {"trace_path": trace_out, "jsonl_path": jsonl_out,
+            "trace_events": len(obj["traceEvents"]),
+            "round_spans": round_spans, "aggregations": len(hist_t),
+            "tracer_null_parity": True}
 
 
 def contention_sweep(w0, target: float, max_epochs: int,
@@ -434,6 +519,12 @@ def main():
     ap.add_argument("--skip-fault-sweep", action="store_true",
                     help="skip the (dropout x compute spread x staleness "
                          "fn) robustness sweep cells")
+    ap.add_argument("--trace-out", default=None,
+                    help="emit a Perfetto-loadable Chrome trace of the "
+                         "pipelined async row to this path (plus JSONL "
+                         "next to it) and gate tracer=None bit-parity, "
+                         "trace schema validity, and >=1 round span per "
+                         "committed epoch (DESIGN.md §12)")
     ap.add_argument("--cnn-sats", type=int, default=0,
                     help="also run the accuracy-aware CNN study at this "
                          "constellation size (>= 200 for the ROADMAP item; "
@@ -474,6 +565,11 @@ def main():
     if report["pipelined_vs_async_speedup"]:
         print(f"pipelined/single-round async speedup: "
               f"{report['pipelined_vs_async_speedup']:.2f}x")
+
+    if args.trace_out:
+        report["trace_smoke"] = trace_smoke(
+            w0, args.target, args.max_epochs, args.days * 86400.0,
+            args.trace_out)
 
     if not args.skip_contention_sweep:
         report["contention_sweep"] = contention_sweep(

@@ -1,0 +1,199 @@
+"""Summarize an exported scheduler trace (DESIGN.md §12).
+
+Consumes either artifact `obs/export.py` writes — the Chrome
+trace-event JSON (``sched_bench.py --trace-out``) or the JSONL next to
+it — and prints three terminal views:
+
+* **round waterfall**: one line per round, in open order, with an ASCII
+  timeline bar over the run horizon plus the phase durations (recruit /
+  transfers / trigger window) and per-round arrival / retry / drop
+  counts;
+* **per-PS utilization**: reserved channel-seconds per PS and direction
+  (from the §9 pools' ``channel_busy`` spans) and outage darkness (§11
+  ``outage`` spans), as fractions of the horizon;
+* **retry/backoff histograms**: transfer failures by attempt number and
+  the applied retry delays (AIMD or exponential) bucketed into a text
+  histogram.
+
+Usage:  PYTHONPATH=src python benchmarks/trace_report.py trace.json
+        PYTHONPATH=src python benchmarks/trace_report.py trace.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+from typing import Dict, List
+
+from repro.obs.trace import (EV_ARRIVAL, EV_DROP, EV_TRANSFER_FAILED,
+                             EV_TRANSFER_RETRY, SPAN_CHANNEL, SPAN_OUTAGE,
+                             SPAN_RECRUIT, SPAN_ROUND, SPAN_TRANSFERS,
+                             SPAN_TRIGGER, Instant, Span, Tracer)
+
+_US = 1e6
+
+
+def load_trace(path: str) -> Tracer:
+    """Rebuild a Tracer buffer from either export format (sniffed by
+    content, not extension: JSONL lines start with ``{"kind"``)."""
+    t = Tracer()
+    with open(path) as f:
+        head = f.read(16)
+        f.seek(0)
+        if head.lstrip().startswith('{"kind"'):
+            for line in f:
+                if not line.strip():
+                    continue
+                d = json.loads(line)
+                if d["kind"] == "span":
+                    t.spans.append(Span(d["name"], d["track"],
+                                        d["t_start"], d["t_end"],
+                                        d.get("args", {})))
+                else:
+                    t.instants.append(Instant(d["name"], d["track"],
+                                              d["t"], d.get("args", {})))
+            return t
+        obj = json.load(f)
+    names: Dict[int, str] = {}
+    for ev in obj["traceEvents"]:
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            names[ev["tid"]] = ev["args"]["name"]
+    for ev in obj["traceEvents"]:
+        track = names.get(ev.get("tid"), str(ev.get("tid")))
+        if ev.get("ph") == "X":
+            t0 = ev["ts"] / _US
+            t.spans.append(Span(ev["name"], track, t0,
+                                t0 + ev["dur"] / _US, ev.get("args", {})))
+        elif ev.get("ph") in ("i", "I"):
+            t.instants.append(Instant(ev["name"], track, ev["ts"] / _US,
+                                      ev.get("args", {})))
+    return t
+
+
+def _horizon(t: Tracer) -> float:
+    ends = [s.t_end for s in t.spans] + [i.t for i in t.instants]
+    return max(ends) if ends else 1.0
+
+
+def _bar(t0: float, t1: float, horizon: float, width: int = 48) -> str:
+    a = int(round(width * t0 / horizon))
+    b = max(a + 1, int(round(width * t1 / horizon)))
+    return "." * a + "#" * (b - a) + "." * max(0, width - b)
+
+
+def round_waterfall(t: Tracer, width: int = 48) -> List[str]:
+    horizon = _horizon(t)
+    by_track: Dict[str, Dict[str, Span]] = defaultdict(dict)
+    for s in t.spans:
+        if s.name in (SPAN_ROUND, SPAN_RECRUIT, SPAN_TRANSFERS,
+                      SPAN_TRIGGER):
+            by_track[s.track][s.name] = s
+    counts: Dict[str, Dict[str, int]] = defaultdict(
+        lambda: defaultdict(int))
+    for i in t.instants:
+        counts[i.track][i.name] += 1
+    out = [f"# round waterfall  (horizon {horizon / 3600.0:.2f} h, "
+           f"bar width {width})",
+           f"{'round':>8s} {'open_h':>7s} {'dur_h':>6s} "
+           f"{'recr_h':>6s} {'xfer_h':>6s} {'trig_h':>6s} "
+           f"{'arr':>4s} {'rty':>4s} {'drop':>4s}  timeline"]
+    rounds = sorted((tr for tr in by_track if SPAN_ROUND in by_track[tr]),
+                    key=lambda tr: by_track[tr][SPAN_ROUND].t_start)
+    for tr in rounds:
+        ph = by_track[tr]
+        rs = ph[SPAN_ROUND]
+
+        def _d(name):
+            s = ph.get(name)
+            return f"{s.duration / 3600.0:6.2f}" if s else "     -"
+
+        c = counts[tr]
+        out.append(
+            f"{tr.split()[-1]:>8s} {rs.t_start / 3600.0:7.2f} "
+            f"{rs.duration / 3600.0:6.2f} {_d(SPAN_RECRUIT)} "
+            f"{_d(SPAN_TRANSFERS)} {_d(SPAN_TRIGGER)} "
+            f"{c[EV_ARRIVAL]:4d} {c[EV_TRANSFER_RETRY]:4d} "
+            f"{c[EV_DROP]:4d}  "
+            f"{_bar(rs.t_start, rs.t_end, horizon, width)}")
+    return out
+
+
+def ps_utilization(t: Tracer) -> List[str]:
+    horizon = _horizon(t)
+    busy: Dict[tuple, float] = defaultdict(float)
+    dark: Dict[str, float] = defaultdict(float)
+    for s in t.spans:
+        if s.name == SPAN_CHANNEL:
+            busy[(s.track, s.args.get("direction", "?"))] += s.duration
+        elif s.name == SPAN_OUTAGE:
+            dark[s.track] += s.duration
+    out = ["# per-PS utilization (reserved channel-seconds / horizon)"]
+    if not busy and not dark:
+        out.append("  (no contention or outage tracks in this trace — "
+                   "run with ps_channels / ps_outages set)")
+        return out
+    for (track, direction), b in sorted(busy.items()):
+        out.append(f"  {track:>6s} {direction}: busy {b:10.1f} s  "
+                   f"({b / horizon:6.1%} of horizon)")
+    for track, d in sorted(dark.items()):
+        out.append(f"  {track:>6s} outage: dark {d:10.1f} s  "
+                   f"({d / horizon:6.1%} of horizon)")
+    return out
+
+
+def retry_report(t: Tracer, buckets: int = 8) -> List[str]:
+    fails = [i for i in t.instants if i.name == EV_TRANSFER_FAILED]
+    retries = [i for i in t.instants if i.name == EV_TRANSFER_RETRY]
+    drops = [i for i in t.instants if i.name == EV_DROP]
+    out = [f"# retries: {len(fails)} transfer failures, "
+           f"{len(retries)} retries, {len(drops)} drops"]
+    by_attempt: Dict[int, int] = defaultdict(int)
+    for i in fails:
+        by_attempt[int(i.args.get("attempt", 0))] += 1
+    for a in sorted(by_attempt):
+        out.append(f"  attempt {a}: {'#' * by_attempt[a]} "
+                   f"({by_attempt[a]})")
+    delays = sorted(float(i.args["delay_s"]) for i in retries
+                    if "delay_s" in i.args)
+    if delays:
+        lo, hi = delays[0], delays[-1]
+        span = (hi - lo) or 1.0
+        hist = [0] * buckets
+        for d in delays:
+            hist[min(buckets - 1, int(buckets * (d - lo) / span))] += 1
+        out.append(f"# applied retry delays  (min {lo:.0f} s, "
+                   f"max {hi:.0f} s)")
+        for k, n in enumerate(hist):
+            a = lo + span * k / buckets
+            b = lo + span * (k + 1) / buckets
+            out.append(f"  [{a:7.0f}, {b:7.0f}) s: {'#' * n} ({n})")
+    by_reason: Dict[str, int] = defaultdict(int)
+    for i in drops:
+        by_reason[i.args.get("reason", "?")] += 1
+    for reason, n in sorted(by_reason.items()):
+        out.append(f"  dropped ({reason}): {n}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace JSON or JSONL from "
+                                  "sched_bench.py --trace-out")
+    ap.add_argument("--width", type=int, default=48,
+                    help="waterfall bar width in characters")
+    args = ap.parse_args()
+    t = load_trace(args.trace)
+    print(f"loaded {args.trace}: {len(t.spans)} spans, "
+          f"{len(t.instants)} instants, {len(t.tracks())} tracks\n")
+    for line in round_waterfall(t, args.width):
+        print(line)
+    print()
+    for line in ps_utilization(t):
+        print(line)
+    print()
+    for line in retry_report(t):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -126,6 +126,9 @@ class EpochStepProgram:
     mesh: Optional[Mesh] = None
     donate: bool = True
     use_kernel: bool = False           # fed_agg Pallas contraction (below)
+    # host-side dispatch timing (obs/profile.DispatchProfiler); None (the
+    # default) takes the exact pre-existing path — no timing, no overhead
+    profiler: Optional[Any] = None
 
     dispatches: int = 0                # fused one-dispatch epochs
     fallback_dispatches: int = 0       # epochs that needed train+agg split
@@ -212,7 +215,26 @@ class EpochStepProgram:
             self.fallback_dispatches += 1
         else:
             self.dispatches += 1
-        return self._step(
+        prof = self.profiler
+        if prof is None:
+            return self._step(
+                w_flat, carry, inputs,
+                jnp.asarray(ids_np, jnp.int32), np.uint32(seed),
+                jnp.asarray(np.asarray(wv_bank, np.float32)),
+                jnp.asarray(np.asarray(wv_carry, np.float32)),
+                np.float32(base_w),
+                jnp.asarray(np.asarray(dw_row, np.float32)),
+                jnp.asarray(np.asarray(dw_seg, np.int32)),
+                int(kpad), int(blocked_m),
+                jnp.asarray(np.asarray(dw_carry, np.float32)),
+                ref)
+        # the static dispatch signature: everything that forces a new jit
+        # trace — array shapes (carry rows, participant count), the static
+        # args and the fallback split.  First-seen = trace+compile.
+        sig = (int(carry.shape[0]), int(len(ids_np)), int(kpad),
+               int(blocked_m), bool(fallback))
+        t0 = prof.timer()
+        out = self._step(
             w_flat, carry, inputs,
             jnp.asarray(ids_np, jnp.int32), np.uint32(seed),
             jnp.asarray(np.asarray(wv_bank, np.float32)),
@@ -223,6 +245,10 @@ class EpochStepProgram:
             int(kpad), int(blocked_m),
             jnp.asarray(np.asarray(dw_carry, np.float32)),
             ref)
+        if prof.block:
+            jax.block_until_ready(out)
+        prof.record(sig, bool(fallback), prof.timer() - t0)
+        return out
 
 
 def make_epoch_program(trainer, params, mesh: Optional[Mesh] = None,

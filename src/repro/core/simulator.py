@@ -80,6 +80,12 @@ class SimConfig:
     # retry/backoff.  None attaches NO fault state at all — bit-identical
     # to the fault-free simulator (the parity contract)
     fault_model: Optional[object] = None
+    # observability (obs/, DESIGN.md §12): a `obs.Tracer` records the
+    # event runtime's round lifecycle; a `obs.DispatchProfiler` times the
+    # fused program's host dispatches.  Both are strictly read-only —
+    # None (the defaults) attaches nothing and stays bit-identical
+    tracer: Optional[object] = None
+    profiler: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -770,6 +776,11 @@ class FLSimulation:
             from repro.core.epoch_step import make_epoch_program
             fused = make_epoch_program(self.trainer, w0, mesh=self.sim.mesh,
                                        use_kernel=self.spec.use_agg_kernel)
+            if fused is not None:
+                # dispatch profiling hook (obs/profile.py); programs are
+                # cached on the trainer, so (re)set it every run — None
+                # detaches a previous run's profiler
+                fused.profiler = getattr(self.sim, "profiler", None)
         self._fused_prog = fused
         self._w_flat = None               # flat device view (stacked/fused)
         self._dist_pending = None

@@ -1,0 +1,19 @@
+"""Observability layer (DESIGN.md §12): structured tracing, the metric
+registry behind ``runtime.stats``, Perfetto/JSONL export, and fused-
+dispatch profiling.  Everything here is strictly read-only with respect
+to simulation state — ``tracer=None`` / ``profiler=None`` runs are
+bit-identical and pay nothing."""
+from repro.obs.export import (add_runtime_tracks, export_chrome,
+                              export_jsonl, validate_chrome_trace)
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricRegistry,
+                               StatsView)
+from repro.obs.profile import DispatchProfiler
+from repro.obs.trace import NULL_TRACER, Instant, NullTracer, Span, Tracer
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL_TRACER", "Span", "Instant",
+    "Counter", "Gauge", "Histogram", "MetricRegistry", "StatsView",
+    "DispatchProfiler",
+    "export_chrome", "export_jsonl", "validate_chrome_trace",
+    "add_runtime_tracks",
+]

@@ -1,0 +1,94 @@
+"""Host-side dispatch profiling for the fused epoch program.
+
+`core/epoch_step.EpochStepProgram` counts dispatches but says nothing
+about where the host wall-clock went — cold trace+compile calls are
+orders of magnitude slower than steady-state executes, and without
+separating them a bench row's ``wall_s`` conflates both.  A
+:class:`DispatchProfiler` attached as ``program.profiler`` (or via
+``SimConfig.profiler``, which `core/simulator._init_run` forwards)
+receives a callback around every ``step()`` dispatch:
+
+* **cold vs steady**: a dispatch whose static signature — (carry rows,
+  participant count, ``kpad``, ``blocked_m``, fallback) — has not been
+  seen by this profiler is a trace+compile call and its wall time lands
+  in ``compile_s``; repeats land in ``dispatch_s``.  Dispatch is async
+  (the program returns lazy arrays), so these are *host dispatch*
+  times; pass ``block=True`` to block on the outputs inside the timed
+  region for device-inclusive numbers (changes what is measured, never
+  the results).
+* **dispatches per trigger**: the event runtime calls ``trigger()``
+  once per commit, so ``summary()`` can report how many device programs
+  each aggregation trigger consumed (> 1 only via the two-dispatch
+  fallback).
+
+``profiler=None`` (the default everywhere) skips the hook entirely —
+the program's ``step`` takes the exact pre-existing path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Set, Tuple
+
+
+class DispatchProfiler:
+    """Wall-clock accounting of fused-epoch dispatches.
+
+    One profiler per run (it keys cold-ness on signatures *it* has
+    seen; the program's jit cache may be warmer when the trainer is
+    reused across runs — then every call lands in ``dispatch_s``, which
+    is the truth: nothing compiled).
+    """
+
+    def __init__(self, block: bool = False):
+        self.block = bool(block)
+        self.dispatches = 0                # total step() calls
+        self.cold_dispatches = 0           # first-seen static signatures
+        self.fallback_dispatches = 0       # two-dispatch fallback calls
+        self.compile_s = 0.0               # host seconds in cold calls
+        self.dispatch_s = 0.0              # host seconds in warm calls
+        self.triggers = 0                  # runtime commits observed
+        self._seen: Set[Tuple] = set()
+
+    # ---- hooks (called by EpochStepProgram.step / the runtime) -------------
+
+    def record(self, signature: Tuple, fallback: bool,
+               wall_s: float) -> None:
+        """One dispatch completed: ``signature`` is the static shape key,
+        ``wall_s`` the host seconds spent in the dispatch call."""
+        self.dispatches += 1
+        if fallback:
+            self.fallback_dispatches += 1
+        if signature in self._seen:
+            self.dispatch_s += wall_s
+        else:
+            self._seen.add(signature)
+            self.cold_dispatches += 1
+            self.compile_s += wall_s
+
+    def trigger(self) -> None:
+        """One aggregation trigger committed (runtime hook)."""
+        self.triggers += 1
+
+    # ---- reading -----------------------------------------------------------
+
+    def timer(self) -> float:
+        return time.perf_counter()
+
+    def summary(self) -> Dict:
+        """JSON-serializable wall-clock attribution for bench rows."""
+        warm = self.dispatches - self.cold_dispatches
+        return {
+            "dispatches": self.dispatches,
+            "cold_dispatches": self.cold_dispatches,
+            "fallback_dispatches": self.fallback_dispatches,
+            "compile_s": self.compile_s,
+            "dispatch_s": self.dispatch_s,
+            "dispatch_mean_s": (self.dispatch_s / warm) if warm else None,
+            "triggers": self.triggers,
+            "dispatches_per_trigger": ((self.dispatches / self.triggers)
+                                       if self.triggers else None),
+            "blocking": self.block,
+        }
+
+    def reset(self) -> None:
+        self.__init__(block=self.block)

@@ -53,6 +53,7 @@ from repro.core.links import LinkModel
 from repro.core.propagation import PropagationModel
 from repro.core.topology import RingOfStars
 from repro.core.visibility import VisibilityTimeline
+from repro.obs.metrics import Histogram
 
 
 class ChannelPool:
@@ -83,6 +84,11 @@ class ChannelPool:
         self.grants = 0
         self.queue_wait_s = 0.0
         self.busy_s = [0.0] * num_ps
+        # per-grant FIFO queue-wait distribution (obs/metrics.py,
+        # DESIGN.md §12) — lives INSIDE the pool so ContentionModel's
+        # snapshot/restore deepcopy rolls rejected grants' observations
+        # back along with the reservations themselves
+        self.wait_hist = Histogram("queue_wait_s")
 
     @staticmethod
     def _earliest(iv: List[Tuple[float, float]], t_req: float,
@@ -127,6 +133,7 @@ class ChannelPool:
                 break                    # can't start any earlier
         self._insert(self.res[ps][best_c], best, best + duration)
         self.queue_wait_s += best - t_req
+        self.wait_hist.observe(best - t_req)
         return best
 
     def backlog(self, ps: int, t: float) -> float:
@@ -148,6 +155,7 @@ class ChannelPool:
         denom = max(float(horizon_s) * cap, 1e-12)
         return {"grants": self.grants,
                 "queue_wait_s": self.queue_wait_s,
+                "queue_wait_hist": self.wait_hist.summary(),
                 "busy_s": list(self.busy_s),
                 "utilization": [b / denom for b in self.busy_s]}
 

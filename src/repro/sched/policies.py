@@ -109,6 +109,12 @@ class AsyncFLEOPolicy:
         stats = getattr(rt, "stats", None)
         if stats is not None:
             stats["shrunk_windows"] = stats.get("shrunk_windows", 0) + 1
+        tracer = getattr(rt, "tracer", None)
+        if tracer is not None and tracer.enabled:
+            from repro.obs.trace import EV_WINDOW_SHRUNK
+            tracer.instant(EV_WINDOW_SHRUNK, t, track=f"round {rnd.idx}",
+                           window_s=float(window),
+                           scale=float(self.rx_backlog_window_scale))
         return window * self.rx_backlog_window_scale
 
     def round_deadline(self, rt, rnd) -> Optional[float]:

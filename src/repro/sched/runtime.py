@@ -89,8 +89,10 @@ transmit energy too.  *Adaptive backoff*: with
 ``FaultModel.adaptive_backoff`` the retry delay is AIMD — additive
 increase on each failure scaled by the sink rx pool's observed mean
 queue wait (capped at ``retry_backoff_cap_s``), halved on a successful
-retry — replacing the blind exponential; chosen delays land in
-``stats["backoff_delays_s"]``.  A conservation ledger
+retry — replacing the blind exponential; chosen delays land in the
+bounded ``backoff_delays_s`` histogram (``stats["backoff_delays_s"]``
+renders its count/sum/min/max/p50/p95/p99 summary).  A conservation
+ledger
 (``arrivals_expected`` / ``arrivals_committed`` + the ``dropped_*``
 counters) pins that every expected arrival is committed, dropped, or
 still pending — across reroutes, deferrals and retries
@@ -112,9 +114,53 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.modelbank import gather_rows
+from repro.obs.metrics import MetricRegistry, StatsView
+from repro.obs.trace import (EV_ARRIVAL, EV_COMMIT, EV_DISPATCH, EV_DROP,
+                             EV_ENERGY_DEFER, EV_FAILOVER, EV_PS_DOWN,
+                             EV_PS_UP, EV_REROUTE, EV_TRANSFER_FAILED,
+                             EV_TRANSFER_RETRY, EV_TRIGGER, NULL_TRACER,
+                             SPAN_RECRUIT, SPAN_ROUND, SPAN_TRANSFERS,
+                             SPAN_TRIGGER)
 from repro.sched.contacts import ContactPlan
 from repro.sched.events import Event, EventKind, EventQueue
 from repro.sched.policies import make_handoff_policy, make_policy
+
+# the ``runtime.stats`` key set, in its historical order — the StatsView
+# compatibility contract: same keys, same values, same JSON shape, backed
+# by the obs/metrics registry instead of an ad-hoc dict (DESIGN.md §12)
+STAT_COUNTER_KEYS = (
+    "rounds_opened", "max_rounds_in_flight",
+    "pipelined_opens", "cross_round_adoptions",
+    "closed_round_arrivals",
+    # fault/retry telemetry (zero-filled so benchmark rows always carry
+    # the keys): failed attempts, rescheduled retransmissions, updates
+    # dropped after max_retries, updates dropped because the retry could
+    # never complete, and contention-shrunk trigger windows
+    "transfers_failed", "transfer_retries",
+    "dropped_after_max_retries", "dropped_unreachable",
+    "shrunk_windows",
+    # outage / failover telemetry (DESIGN.md §11): arrivals rerouted off
+    # a dark sink, sink role failovers of open rounds, updates dropped
+    # because no PS recovered inside the horizon, and opens/triggers/
+    # arrivals deferred to a recovery
+    "rerouted_arrivals", "sink_failovers",
+    "dropped_outage", "outage_deferrals",
+    # energy telemetry (§11): deferred uplinks, recruits skipped for an
+    # empty battery, updates dropped as never affordable
+    "energy_deferrals", "energy_skipped_recruits",
+    "dropped_energy",
+    # fault-aware participant selection skips (§11)
+    "fault_aware_skips",
+    # conservation ledger (§11): every expected arrival ends up committed
+    # (used or adopted-from-carry), in a dropped_* bucket, or still
+    # pending at run end — tests/test_property.py pins the identity
+    # across reroute/defer/retry paths
+    "arrivals_expected", "arrivals_committed")
+
+# AIMD backoff delays actually applied (adaptive_backoff) — a bounded
+# histogram (count/sum/min/max/p50/p95/p99 in the compat view), not the
+# unbounded list it used to be
+STAT_HISTOGRAM_KEYS = ("backoff_delays_s",)
 
 
 @dataclasses.dataclass
@@ -139,6 +185,9 @@ class RoundState:
     # but already-timed arrivals stay addressed here and reroute lazily
     # at their pop instant when this PS is (still) dark
     open_sink: int = -1
+    # open tracer span handle for the round's lifetime (obs/trace.py);
+    # -1 when untraced
+    span: int = -1
 
 
 class EventDrivenRuntime:
@@ -155,10 +204,17 @@ class EventDrivenRuntime:
     straggler adoptions across round boundaries.
     """
 
-    def __init__(self, fls, policy=None, plan: Optional[ContactPlan] = None):
+    def __init__(self, fls, policy=None, plan: Optional[ContactPlan] = None,
+                 tracer=None):
         self.fls = fls
         self.sim = fls.sim
         self.spec = fls.spec
+        # observability (DESIGN.md §12): the tracer records the round
+        # lifecycle read-only — an explicit argument wins, else
+        # SimConfig.tracer, else the strict no-op NULL_TRACER so every
+        # call site below is unconditional and untraced runs pay nothing
+        self.tracer = (tracer if tracer is not None
+                       else getattr(fls.sim, "tracer", None)) or NULL_TRACER
         self.policy = policy or make_policy(fls.spec)
         self.handoff = make_handoff_policy(fls.spec)
         self.max_in_flight = max(1, int(getattr(fls.spec,
@@ -183,37 +239,15 @@ class EventDrivenRuntime:
         self.energy = None
         # AIMD retry-delay state for FaultModel.adaptive_backoff
         self._retry_delay_s = 0.0
-        self.stats: Dict = {
-            "rounds_opened": 0, "max_rounds_in_flight": 0,
-            "pipelined_opens": 0, "cross_round_adoptions": 0,
-            "closed_round_arrivals": 0,
-            # fault/retry telemetry (zero-filled so benchmark rows always
-            # carry the keys): failed attempts, rescheduled
-            # retransmissions, updates dropped after max_retries, updates
-            # dropped because the retry could never complete, and
-            # contention-shrunk trigger windows
-            "transfers_failed": 0, "transfer_retries": 0,
-            "dropped_after_max_retries": 0, "dropped_unreachable": 0,
-            "shrunk_windows": 0,
-            # outage / failover telemetry (DESIGN.md §11): arrivals
-            # rerouted off a dark sink, sink role failovers of open
-            # rounds, updates dropped because no PS recovered inside the
-            # horizon, and opens/triggers/arrivals deferred to a recovery
-            "rerouted_arrivals": 0, "sink_failovers": 0,
-            "dropped_outage": 0, "outage_deferrals": 0,
-            # energy telemetry (§11): deferred uplinks, recruits skipped
-            # for an empty battery, updates dropped as never affordable
-            "energy_deferrals": 0, "energy_skipped_recruits": 0,
-            "dropped_energy": 0,
-            # fault-aware participant selection skips (§11)
-            "fault_aware_skips": 0,
-            # conservation ledger (§11): every expected arrival ends up
-            # committed (used or adopted-from-carry), in a dropped_*
-            # bucket, or still pending at run end — tests/test_property.py
-            # pins the identity across reroute/defer/retry paths
-            "arrivals_expected": 0, "arrivals_committed": 0,
-            # AIMD backoff delays actually applied (adaptive_backoff)
-            "backoff_delays_s": []}
+        # telemetry: one metric registry per runtime is the single
+        # backing store (DESIGN.md §12); ``stats`` is the historical dict
+        # surface as a live MutableMapping view over it — existing
+        # ``stats[k] += 1`` call sites (here and in sched/policies.py)
+        # keep working unchanged, and the two can never drift
+        self.metrics = MetricRegistry()
+        self.stats: StatsView = StatsView(
+            self.metrics, counter_keys=STAT_COUNTER_KEYS,
+            histogram_keys=STAT_HISTOGRAM_KEYS)
 
     # ---- lifecycle ---------------------------------------------------------
 
@@ -261,9 +295,16 @@ class EventDrivenRuntime:
             EventKind.PS_DOWN: self._on_ps_down,
             EventKind.PS_UP: self._on_ps_up,
         }
+        tracer = self.tracer
+        t_last = 0.0
         while self.events and not self._stop:
             ev = self.events.pop()
+            if tracer.enabled:
+                t_last = max(t_last, ev.time)
             handlers[ev.kind](ev)
+        # finalize the timeline: rounds still alive at the horizon close
+        # at the last processed instant so every opened span exports
+        tracer.close_open_spans(t_last)
         fls._resolve_pending_dists()       # leave grouping state complete
         with fls._seg("eval"):
             for rec in self.history:       # block once, at finalize time
@@ -403,6 +444,28 @@ class EventDrivenRuntime:
         self.stats["pipelined_opens"] += int(pipelined)
         self.stats["max_rounds_in_flight"] = max(
             self.stats["max_rounds_in_flight"], self._open_count())
+        if self.tracer.enabled:
+            # the round's lifecycle track (DESIGN.md §12): one open-ended
+            # span for the whole round plus the two phase spans whose
+            # bounds are known at open — recruit (downlink: open -> last
+            # participant's receive) and transfers (uplink: first
+            # TRAIN_DONE -> last expected sink arrival; retries and
+            # reroutes that move arrivals show up as instants)
+            track = f"round {rnd.idx}"
+            rnd.span = self.tracer.begin(
+                SPAN_ROUND, t, track=track, source=int(source),
+                sink=int(sink), participants=len(participants),
+                pipelined=bool(pipelined), epoch=int(rnd.beta))
+            if participants:
+                self.tracer.span(
+                    SPAN_RECRUIT, t,
+                    max(float(recv[s]) for s in participants), track=track,
+                    participants=len(participants))
+            if expected:
+                self.tracer.span(
+                    SPAN_TRANSFERS, float(np.min(t_done)),
+                    float(expected[-1][0]), track=track,
+                    expected=len(expected))
         for k, s in enumerate(participants):
             td = float(t_done[k])
             self._busy_until[s] = max(self._busy_until[s], td)
@@ -465,6 +528,12 @@ class EventDrivenRuntime:
             # delay back toward the base (DESIGN.md §11)
             self._retry_delay_s = max(fm.retry_backoff_s,
                                       self._retry_delay_s / 2.0)
+        if self.tracer.enabled:
+            self.tracer.instant(EV_ARRIVAL, ev.time,
+                                track=f"round {ev.round_idx}",
+                                sat=int(ev.sat), ps=int(ev.ps),
+                                attempt=int(ev.attempt),
+                                closed_round=rnd.closed)
         if rnd.closed:
             # the round committed before this model landed: its row was
             # carried over (device-resident) at commit time and re-enters
@@ -540,20 +609,31 @@ class EventDrivenRuntime:
         # reactive failover sweep: every open round sunk at the dead PS
         # asks its handoff policy for a live replacement sink; arrivals
         # already timed against the old sink reroute lazily at pop time
+        if self.tracer.enabled:
+            self.tracer.instant(EV_PS_DOWN, ev.time, track=f"ps {ev.ps}",
+                                ps=int(ev.ps))
         for rnd in self.rounds.values():
             if rnd.closed or rnd.sink != ev.ps:
                 continue
             new_sink = self.handoff.failover_sink(self, rnd, ev.time)
             if new_sink is not None and new_sink != rnd.sink:
+                old_sink = rnd.sink
                 rnd.sink = new_sink
                 self.stats["sink_failovers"] += 1
+                if self.tracer.enabled:
+                    self.tracer.instant(EV_FAILOVER, ev.time,
+                                        track=f"round {rnd.idx}",
+                                        old_sink=int(old_sink),
+                                        new_sink=int(new_sink))
 
     def _on_ps_up(self, ev: Event) -> None:
         # recovery needs no sweep: deferred opens/triggers/arrivals were
         # re-scheduled at this instant when they hit the outage, and
         # every outage decision queries the pure OutageSchedule — the
         # event marks the trace-visible recovery boundary
-        pass
+        if self.tracer.enabled:
+            self.tracer.instant(EV_PS_UP, ev.time, track=f"ps {ev.ps}",
+                                ps=int(ev.ps))
 
     def _reroute_arrival(self, rnd: RoundState, ev: Event) -> None:
         """An arrival popped at a sink that is dark at its arrival
@@ -575,7 +655,8 @@ class EventDrivenRuntime:
             t_up = o.next_any_up(ev.time)
             if not ev.time < t_up < self.sim.duration_s:
                 self.stats["dropped_outage"] += 1
-                self._retire_transfer(rnd, loc, ev.row, ev.time)
+                self._retire_transfer(rnd, loc, ev.row, ev.time,
+                                      reason="outage")
                 return
             self.stats["outage_deferrals"] += 1
             self._move_transfer(rnd, loc, ev.row, ev.sat, t_up)
@@ -595,9 +676,15 @@ class EventDrivenRuntime:
             if snap is not None:
                 ctn.restore(snap)
             self.stats["dropped_outage"] += 1
-            self._retire_transfer(rnd, loc, ev.row, ev.time)
+            self._retire_transfer(rnd, loc, ev.row, ev.time,
+                                  reason="outage")
             return
         self.stats["rerouted_arrivals"] += 1
+        if self.tracer.enabled:
+            self.tracer.instant(EV_REROUTE, ev.time,
+                                track=f"round {rnd.idx}", sat=int(ev.sat),
+                                ps_from=int(ev.ps), ps_to=int(target),
+                                t_arrival=float(new_ta))
         self._move_transfer(rnd, loc, ev.row, ev.sat, new_ta)
         self.events.push(Event(new_ta, EventKind.MODEL_ARRIVAL, rnd.idx,
                                sat=ev.sat, row=ev.row,
@@ -616,7 +703,8 @@ class EventDrivenRuntime:
         t_aff = en.time_to_afford(ev.sat, ev.time, en.tx_j)
         if t_aff is None or t_aff >= self.sim.duration_s:
             self.stats["dropped_energy"] += 1
-            self._retire_transfer(rnd, loc, ev.row, ev.time)
+            self._retire_transfer(rnd, loc, ev.row, ev.time,
+                                  reason="energy")
             return
         ctn = self.plan.contention
         snap = ctn.snapshot() if ctn is not None else None
@@ -628,10 +716,16 @@ class EventDrivenRuntime:
             if snap is not None:
                 ctn.restore(snap)
             self.stats["dropped_energy"] += 1
-            self._retire_transfer(rnd, loc, ev.row, ev.time)
+            self._retire_transfer(rnd, loc, ev.row, ev.time,
+                                  reason="energy")
             return
         en.try_drain(ev.sat, t_aff, en.tx_j)    # affordable by construction
         self.stats["energy_deferrals"] += 1
+        if self.tracer.enabled:
+            self.tracer.instant(EV_ENERGY_DEFER, ev.time,
+                                track=f"round {rnd.idx}", sat=int(ev.sat),
+                                t_affordable=float(t_aff),
+                                t_arrival=float(new_ta))
         self._move_transfer(rnd, loc, ev.row, ev.sat, new_ta)
         fm = self.fault
         kind = (EventKind.TRANSFER_FAILED
@@ -674,12 +768,15 @@ class EventDrivenRuntime:
             self.fls._pend_meta[i] = (new_ta, ps, ep)
 
     def _retire_transfer(self, rnd: RoundState, loc, row: int,
-                         t: float) -> None:
+                         t: float, reason: str = "") -> None:
         """Drop an update whose transfer can never complete: remove its
         bookkeeping (the carried device row too — _pend_dev rows are
         indexed parallel to _pend_meta) and let the trigger policy rescue
         a round that now waits on nothing."""
         fls = self.fls
+        if self.tracer.enabled:
+            self.tracer.instant(EV_DROP, t, track=f"round {rnd.idx}",
+                                row=int(row), reason=reason)
         kind, i = loc
         if kind == "pend":
             keep = [j for j in range(len(fls._pend_meta)) if j != i]
@@ -701,6 +798,11 @@ class EventDrivenRuntime:
         fm = self.fault
         rnd = self.rounds[ev.round_idx]
         self.stats["transfers_failed"] += 1
+        if self.tracer.enabled:
+            self.tracer.instant(EV_TRANSFER_FAILED, ev.time,
+                                track=f"round {ev.round_idx}",
+                                sat=int(ev.sat), attempt=int(ev.attempt),
+                                ps=int(ev.ps))
         loc = self._locate_transfer(rnd, ev.row, ev.sat, ev.time)
         if loc is None:
             return          # adopted by a same-instant commit: chain ends
@@ -721,7 +823,9 @@ class EventDrivenRuntime:
                 self._retry_delay_s = min(
                     fm.retry_backoff_cap_s,
                     self._retry_delay_s + max(fm.retry_backoff_s, wait))
-                self.stats["backoff_delays_s"].append(float(delay))
+                # bounded histogram, not an unbounded list: the compat
+                # view renders count/sum/min/max/p50/p95/p99
+                self.metrics.observe("backoff_delays_s", float(delay))
             else:
                 delay = fm.retry_delay_s(ev.attempt)
             t_retry = ev.time + delay
@@ -732,7 +836,8 @@ class EventDrivenRuntime:
                                                    self.energy.tx_j)
                 if t_aff is None:
                     self.stats["dropped_energy"] += 1
-                    self._retire_transfer(rnd, loc, ev.row, ev.time)
+                    self._retire_transfer(rnd, loc, ev.row, ev.time,
+                                          reason="energy")
                     return
                 t_retry = max(t_retry, t_aff)
             if t_retry < self.sim.duration_s:
@@ -745,7 +850,8 @@ class EventDrivenRuntime:
                 new_ta = float(t_arr[0])
         else:
             self.stats["dropped_after_max_retries"] += 1
-            self._retire_transfer(rnd, loc, ev.row, ev.time)
+            self._retire_transfer(rnd, loc, ev.row, ev.time,
+                                  reason="max_retries")
             return
         if not np.isfinite(new_ta) or new_ta >= self.sim.duration_s:
             # unreachable sink or a landing past the horizon: the transfer
@@ -755,9 +861,16 @@ class EventDrivenRuntime:
             if snap is not None:
                 ctn.restore(snap)
             self.stats["dropped_unreachable"] += 1
-            self._retire_transfer(rnd, loc, ev.row, ev.time)
+            self._retire_transfer(rnd, loc, ev.row, ev.time,
+                                  reason="unreachable")
             return
         self.stats["transfer_retries"] += 1
+        if self.tracer.enabled:
+            self.tracer.instant(EV_TRANSFER_RETRY, ev.time,
+                                track=f"round {rnd.idx}", sat=int(ev.sat),
+                                attempt=int(attempt),
+                                delay_s=float(delay),
+                                t_arrival=float(new_ta))
         if self.energy is not None:
             self.energy.try_drain(ev.sat, t_retry, self.energy.tx_j)
         self._move_transfer(rnd, loc, ev.row, ev.sat, new_ta)
@@ -814,12 +927,35 @@ class EventDrivenRuntime:
                 cross += int(ep != rnd.beta)
         self.stats["cross_round_adoptions"] += cross
         self.stats["arrivals_committed"] += len(used) + adopted
+        prof = getattr(self.prog, "profiler", None)
+        if prof is not None:
+            # dispatches-per-trigger attribution (obs/profile.py): the
+            # fused commit below issues 1 (fused) or 2 (fallback) device
+            # programs for this one aggregation trigger
+            prof.trigger()
+        t_trigger = t_agg
         out = fls._fused_commit(self.prog, self.beta, ids_np, participants,
                                 t_agg, used, late, train_epoch=rnd.beta)
         rnd.committed = True
         t_agg, metas, info, _losses = out
         if spec.agg_mode == "interval":
             t_agg = max(t_agg, rnd.t_start + spec.interval_s)
+        if self.tracer.enabled:
+            # the trigger/collection window: first used arrival -> the
+            # aggregation instant, then the commit boundary instants
+            track = f"round {rnd.idx}"
+            t0 = min((a[0] for a in used), default=t_trigger)
+            self.tracer.span(SPAN_TRIGGER, t0, t_agg, track=track,
+                             used=len(used), late=len(late),
+                             adopted=adopted)
+            self.tracer.instant(EV_TRIGGER, t_trigger, track=track,
+                                epoch=int(self.beta))
+            self.tracer.instant(EV_DISPATCH, t_agg, track=track,
+                                epoch=int(self.beta),
+                                participants=len(participants))
+            self.tracer.instant(EV_COMMIT, t_agg, track=track,
+                                epoch=int(self.beta), used=len(used),
+                                late=len(late), adopted=adopted)
         w_tree = (fls._spec.unflatten(fls._w_flat)
                   if fls.evaluator is not None else None)
         acc = fls._record_epoch(self.history, self.beta, t_agg, metas, info,
@@ -837,4 +973,6 @@ class EventDrivenRuntime:
         if not rnd.closed and rnd.committed and \
                 self.policy.round_complete(rnd):
             rnd.closed = True
+            if rnd.span >= 0:
+                self.tracer.end(rnd.span, t)
             self.events.push(Event(t, EventKind.SINK_HANDOFF, rnd.idx))

@@ -629,17 +629,20 @@ def test_adaptive_backoff_applied_and_capped():
     rt = EventDrivenRuntime(fls)
     hist = rt.run(W0, max_epochs=4)
     assert len(hist) == 4
+    # the applied delays live in a bounded histogram (obs/metrics.py);
+    # the stats view renders its count/sum/min/max/percentile summary
     delays = rt.stats["backoff_delays_s"]
-    assert delays and rt.stats["transfer_retries"] > 0
+    assert delays["count"] > 0 and rt.stats["transfer_retries"] > 0
     # every applied delay sits in [base, cap]; additive increase under
     # sustained loss actually moves it off the base
-    assert min(delays) >= 60.0 and max(delays) <= 240.0
-    assert max(delays) > 60.0
+    assert delays["min"] >= 60.0 and delays["max"] <= 240.0
+    assert delays["max"] > 60.0
+    assert delays["min"] <= delays["p50"] <= delays["max"]
     # the default (adaptive_backoff=False) keeps the blind exponential:
     # no delays are recorded at all
     off = dataclasses.replace(fm, adaptive_backoff=False)
     fls2 = _sim("asyncfleo-twohap", True, fault_model=off)
     rt2 = EventDrivenRuntime(fls2)
     rt2.run(W0, max_epochs=4)
-    assert rt2.stats["backoff_delays_s"] == []
+    assert rt2.stats["backoff_delays_s"]["count"] == 0
     assert rt2.stats["transfers_failed"] > 0
