@@ -79,7 +79,6 @@ import numpy as np
 
 from repro.core import FLSimulation, SimConfig, convergence_time
 from repro.core.links import LinkModel
-from repro.core.modelbank import FlatSpec, flatten_tree
 from repro.fl.strategies import get_strategy
 from repro.obs import (DispatchProfiler, Tracer, add_runtime_tracks,
                        export_chrome, export_jsonl, validate_chrome_trace)
@@ -119,61 +118,12 @@ FAULT_SPREADS = (0.0, 1.0)
 FAULT_STALENESS = ("eq13", "poly")
 
 
-def make_model(key_seed: int = 0, width: int = 64):
-    rng = np.random.default_rng(key_seed)
-    return {
-        "w1": rng.standard_normal((width, width)).astype(np.float32) * 0.0,
-        "w2": rng.standard_normal((width, width)).astype(np.float32) * 0.0,
-        "b": np.zeros((width,), np.float32),
-    }
-
-
-class ConvergingTrainer:
-    """Deterministic fused-protocol trainer: every local step moves the
-    model halfway toward the all-ones optimum (plus a zero-mean per-sat
-    perturbation), so accuracy-vs-epoch is identical across policies and
-    the measured difference is PURE scheduling delay."""
-
-    def __init__(self, w0, rate: float = 0.5, jitter: float = 1e-3):
-        self.spec = FlatSpec.of(w0)
-        self._rate = rate
-        self._jitter = jitter
-
-    def data_size(self, sat: int) -> int:
-        return 100 + (sat % 7) * 10
-
-    def epoch_inputs(self, ids_np):
-        return None
-
-    def epoch_train_fn(self):
-        rate, jitter = self._rate, self._jitter
-
-        def _fn(params, inputs, ids, seed):
-            flat = flatten_tree(params)
-            # zero-mean per-(sat, seed) jitter: cancels in aggregation up
-            # to weighting differences, so policies stay comparable
-            phase = ((ids * 37 + seed.astype(jnp.int32)) % 13
-                     - 6).astype(jnp.float32) * jitter
-            stack = (flat[None, :] * (1.0 - rate) + rate
-                     + phase[:, None])
-            return stack, jnp.zeros(ids.shape[0])
-        return _fn
-
-    def train_many_stacked(self, sats, params, seed):   # stacked protocol
-        from repro.core.modelbank import ModelBank, pad_bucket_ids
-        ids, n = pad_bucket_ids(list(sats))
-        fn = self.epoch_train_fn()
-        stack, _ = fn(params, None, jnp.asarray(ids),
-                      jnp.uint32(np.uint32(seed)))
-        return ModelBank(self.spec, stack[:n]), np.zeros(n)
-
-
-class MeanDistanceEvaluator:
-    """acc = 1 - mean|w - 1| (clipped): 0 at w0 = zeros, 1 at the optimum."""
-
-    def __call__(self, params) -> float:
-        flat = np.asarray(flatten_tree(params))
-        return 1.0 - min(1.0, float(np.mean(np.abs(flat - 1.0))))
+# the deterministic fused-protocol testbed (trainer/evaluator/model) moved
+# to `repro.sweep.testbed` so the batched sweep engine and this benchmark
+# share ONE definition; re-exported here because tests and the CNN study
+# import them from this module
+from repro.sweep.testbed import (ConvergingTrainer, MeanDistanceEvaluator,
+                                 make_model)
 
 
 def _run_policy(name: str, strategy: str, w0, target: float,
@@ -496,6 +446,68 @@ def cnn_study(num_sats: int, target: float, max_epochs: int,
     return out
 
 
+def policy_sweep(w0, target: float, max_epochs: int, duration_s: float,
+                 n_scenarios: int, ps_channels: Optional[int] = None) -> Dict:
+    """Percentile-band Monte-Carlo sweep (DESIGN.md §13): the async /
+    pipelined / sync head-to-head over ``n_scenarios`` seeds per policy,
+    all 3 x n scenarios multiplexed through ONE DispatchBatcher so the
+    whole sweep costs a handful of physical device programs.  Emits one
+    band cell per policy (p10/p50/p90 over convergence delay, epochs to
+    target, final accuracy, aggregations, plus the draw spec) and the
+    sweep-wide dispatch economy (logical = what the same scenarios cost
+    sequentially, a parity invariant; physical = programs actually
+    launched, counted by the PR 8 DispatchProfiler).  Under
+    ``--fail-if-not-lower`` the async<sync and pipelined<=async gates
+    move onto the p50 band, and physical < logical is itself a gate."""
+    from repro.sweep import (DispatchBatcher, ScenarioSpec, grid,
+                             reduce_results, run_scenarios)
+    seeds = list(range(n_scenarios))
+    rows = POLICY_ROWS[:3]
+    base = ScenarioSpec(duration_s=duration_s, dt_s=30.0,
+                        train_time_s=300.0, ps_channels=ps_channels)
+    specs = grid(base, strategy=[s for _, s in rows], seed=seeds)
+    prof = DispatchProfiler()
+    batcher = DispatchBatcher(mode="exact", profiler=prof)
+    t0 = time.perf_counter()
+    results = run_scenarios(specs, w0, batched=True, max_epochs=max_epochs,
+                            target_accuracy=target, batcher=batcher)
+    wall = time.perf_counter() - t0
+    by_strategy: Dict[str, list] = {}
+    for spec, res in zip(specs, results):
+        by_strategy.setdefault(spec.strategy, []).append(res)
+    cells = []
+    for name, strategy in rows:
+        rs = by_strategy[strategy]
+        bands = reduce_results(rs)
+        cells.append({
+            "policy": name, "strategy": strategy,
+            "n_scenarios": len(rs),
+            "draw": {"kind": "grid", "axes": {"seed": seeds}},
+            "bands": bands,
+            "logical_dispatches": sum(r.dispatches + r.fallback_dispatches
+                                      for r in rs),
+        })
+        band = bands["convergence_delay_s"]
+        print(f"[sweep n={len(rs)}] {name:18s}: conv_delay p50 "
+              f"{_h(band['p50'])} (p10 {_h(band['p10'])}, "
+              f"p90 {_h(band['p90'])}, {band['n_failed']} failed)")
+    logical = sum(r.dispatches + r.fallback_dispatches for r in results)
+    print(f"[sweep] dispatch economy: {batcher.physical_dispatches} "
+          f"physical vs {logical} logical "
+          f"(max group {batcher.max_group})")
+    return {
+        "n_scenarios": len(specs), "target": target,
+        "cells": cells,
+        "dispatch_economy": {
+            "logical_dispatches": logical,
+            "physical_dispatches": batcher.physical_dispatches,
+            "batcher": batcher.summary(),
+            "profile": prof.summary(),
+        },
+        "wall_s": wall,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--target", type=float, default=0.9)
@@ -532,6 +544,15 @@ def main():
     ap.add_argument("--cnn-target", type=float, default=0.55,
                     help="target test accuracy for the CNN study")
     ap.add_argument("--cnn-max-epochs", type=int, default=10)
+    ap.add_argument("--sweep", type=int, default=0,
+                    help="run the batched Monte-Carlo policy sweep with "
+                         "this many seeds per policy cell (DESIGN.md "
+                         "§13): p10/p50/p90 band rows land in the "
+                         "report's 'sweep' section and, under "
+                         "--fail-if-not-lower, the async<sync and "
+                         "pipelined<=async gates move onto the p50 band "
+                         "plus a physical<logical dispatch-economy gate; "
+                         "0 = skip (single-seed gates)")
     args = ap.parse_args()
 
     w0 = make_model()
@@ -590,6 +611,11 @@ def main():
         report["outage_smoke"] = outage_smoke(
             w0, args.target, args.max_epochs, args.days * 86400.0)
 
+    if args.sweep:
+        report["sweep"] = policy_sweep(
+            w0, args.target, args.max_epochs, args.days * 86400.0,
+            args.sweep, ps_channels=main_channels)
+
     if args.cnn_sats:
         report["cnn_study"] = cnn_study(args.cnn_sats, args.cnn_target,
                                         args.cnn_max_epochs,
@@ -600,11 +626,36 @@ def main():
     print(f"wrote {args.out}")
 
     if args.fail_if_not_lower:
-        if a is None or s is None or not a < s:
+        if args.sweep:
+            # distributional gates (DESIGN.md §13): with band rows
+            # available, the async<sync and pipelined<=async orderings
+            # gate on the MEDIAN over the seed draw instead of one seed
+            bands = {c["policy"]: c["bands"]["convergence_delay_s"]
+                     for c in report["sweep"]["cells"]}
+            a50 = bands["async_asyncfleo"]["p50"]
+            p50 = bands["async_pipelined"]["p50"]
+            s50 = bands["sync_gs_fedavg"]["p50"]
+            if a50 is None or s50 is None or not a50 < s50:
+                raise SystemExit(
+                    f"p50 async convergence delay ({a50}) not strictly "
+                    f"lower than p50 sync ({s50}) over "
+                    f"{report['sweep']['n_scenarios']} scenarios")
+            if p50 is None or not p50 <= a50:
+                raise SystemExit(
+                    f"p50 pipelined convergence delay ({p50}) worse "
+                    f"than p50 single-round async ({a50})")
+            econ = report["sweep"]["dispatch_economy"]
+            if not econ["physical_dispatches"] < econ["logical_dispatches"]:
+                raise SystemExit(
+                    f"sweep dispatch economy broken: "
+                    f"{econ['physical_dispatches']} physical programs "
+                    f"for {econ['logical_dispatches']} logical "
+                    f"dispatches (batching bought nothing)")
+        elif a is None or s is None or not a < s:
             raise SystemExit(
                 f"async convergence delay ({a}) not strictly lower than "
                 f"sync ({s})")
-        if p is None or not p <= a:
+        if not args.sweep and (p is None or not p <= a):
             raise SystemExit(
                 f"pipelined convergence delay ({p}) worse than "
                 f"single-round async ({a})")

@@ -132,11 +132,13 @@ class EpochStepProgram:
 
     dispatches: int = 0                # fused one-dispatch epochs
     fallback_dispatches: int = 0       # epochs that needed train+agg split
+    batched_dispatches: int = 0        # scenario-batched physical dispatches
 
     def __post_init__(self):
         donate = (0,) if self.donate else ()
         self._step = jax.jit(self._trace, donate_argnums=donate,
                              static_argnums=(10, 11))
+        self._batched_fns = {}         # (mode,) -> jitted scenario-batched fn
 
     # ---- traced body -------------------------------------------------------
 
@@ -190,6 +192,82 @@ class EpochStepProgram:
         else:
             dists = jnp.zeros((0,), jnp.float32)
         return new_w, stack, dists, losses
+
+    # ---- scenario batch axis (DESIGN.md §13) -------------------------------
+
+    def _unrolled(self, w_stack, carry, inputs, ids, seeds,
+                  wv_bank, wv_carry, base_w, dw_row, dw_seg, kpad,
+                  blocked_m, dw_carry, ref):
+        """B per-scenario epochs as ONE program, bit-exact per scenario.
+
+        A traced Python loop (unrolled at jit time) over the scenario axis:
+        each iteration is *the same* ``_trace`` computation graph the solo
+        path jits, so XLA sees B independent copies of the identical HLO and
+        every per-scenario output is bitwise what the sequential run
+        produces.  ``jax.vmap`` would be one batched GEMM instead of B —
+        faster, but its batched ``dot_general`` reduces in a different
+        order, so it is NOT bit-exact (~1e-6 on new_w on CPU); that is the
+        opt-in ``mode="vmap"`` below, never the parity default.
+        """
+        outs = []
+        for i in range(w_stack.shape[0]):
+            inp = (None if inputs is None
+                   else jax.tree.map(lambda l: l[i], inputs))
+            outs.append(self._trace(
+                w_stack[i], carry[i], inp, ids[i], seeds[i],
+                wv_bank[i], wv_carry[i], base_w[i], dw_row[i], dw_seg[i],
+                kpad, blocked_m, dw_carry[i], ref[i]))
+        return tuple(jnp.stack(parts) for parts in zip(*outs))
+
+    def batched_step(self, w_stack, carry, inputs, ids, seeds,
+                     wv_bank, wv_carry, base_w, dw_row, dw_seg, kpad: int,
+                     blocked_m: int, dw_carry, ref, *,
+                     mode: str = "exact", fallback: bool = False):
+        """Dispatch B scenarios' epochs as one physical program.
+
+        Every array carries a leading scenario axis B (batch leaves of
+        ``inputs`` too; ``inputs=None`` stays None); ``kpad``/``blocked_m``
+        are static and shared — the DispatchBatcher only groups requests
+        with identical static signatures.  The stacked ``w_stack`` is
+        donated (it is a fresh buffer the batcher built; the per-scenario
+        flats it was stacked from stay alive).  Returns lazy
+        (B, ...)-leading outputs; callers slice per scenario.
+        """
+        if self.mesh is not None or self.use_kernel:
+            raise ValueError("scenario batching supports the plain XLA "
+                             "path only (mesh=None, use_kernel=False); "
+                             "route mesh/kernel programs solo")
+        if mode not in ("exact", "vmap"):
+            raise ValueError(f"unknown scenario batch mode {mode!r}")
+        key = (mode, inputs is None)
+        fn = self._batched_fns.get(key)
+        if fn is None:
+            donate = (0,) if self.donate else ()
+            if mode == "exact":
+                fn = jax.jit(self._unrolled, donate_argnums=donate,
+                             static_argnums=(10, 11))
+            else:
+                in_axes = (0, 0, (None if inputs is None else 0), 0, 0,
+                           0, 0, 0, 0, 0, None, None, 0, 0)
+                fn = jax.jit(jax.vmap(self._trace, in_axes=in_axes),
+                             donate_argnums=donate, static_argnums=(10, 11))
+            self._batched_fns[key] = fn
+        self.batched_dispatches += 1
+        args = (w_stack, carry, inputs, ids, seeds, wv_bank, wv_carry,
+                base_w, dw_row, dw_seg, int(kpad), int(blocked_m),
+                dw_carry, ref)
+        prof = self.profiler
+        if prof is None:
+            return fn(*args)
+        sig = ("batched", mode, int(w_stack.shape[0]),
+               int(carry.shape[1]), int(ids.shape[1]), int(kpad),
+               int(blocked_m), bool(fallback))
+        t0 = prof.timer()
+        out = fn(*args)
+        if prof.block:
+            jax.block_until_ready(out)
+        prof.record(sig, bool(fallback), prof.timer() - t0)
+        return out
 
     # ---- dispatch ----------------------------------------------------------
 

@@ -86,6 +86,13 @@ class SimConfig:
     # None (the defaults) attaches nothing and stays bit-identical
     tracer: Optional[object] = None
     profiler: Optional[object] = None
+    # scenario-batched sweeps (sweep/batch.DispatchBatcher, DESIGN.md
+    # §13): when set, `_init_run` wraps the fused program in the
+    # batcher's proxy so this simulation's epoch dispatches multiplex
+    # into shared device programs with the sweep's other scenarios.
+    # None (the default) attaches nothing — the sequential path is
+    # untouched (the batched-vs-sequential parity contract)
+    dispatcher: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -781,6 +788,14 @@ class FLSimulation:
                 # cached on the trainer, so (re)set it every run — None
                 # detaches a previous run's profiler
                 fused.profiler = getattr(self.sim, "profiler", None)
+                dispatcher = getattr(self.sim, "dispatcher", None)
+                if dispatcher is not None:
+                    # scenario-batched sweep (DESIGN.md §13): route this
+                    # run's dispatches through the shared batcher; the
+                    # proxy keeps step()'s exact surface and counters
+                    fused = dispatcher.wrap(
+                        fused, key=getattr(self.trainer,
+                                           "scenario_batch_key", None))
         self._fused_prog = fused
         self._w_flat = None               # flat device view (stacked/fused)
         self._dist_pending = None

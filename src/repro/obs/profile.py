@@ -26,6 +26,7 @@ the program's ``step`` takes the exact pre-existing path.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Dict, Set, Tuple
 
@@ -48,6 +49,10 @@ class DispatchProfiler:
         self.dispatch_s = 0.0              # host seconds in warm calls
         self.triggers = 0                  # runtime commits observed
         self._seen: Set[Tuple] = set()
+        # scenario-batched sweeps share one profiler across worker
+        # threads (sweep/batch.py): commits race on trigger(); record()
+        # stays driver-thread-only so the timing path is uncontended
+        self._trigger_lock = threading.Lock()
 
     # ---- hooks (called by EpochStepProgram.step / the runtime) -------------
 
@@ -67,7 +72,8 @@ class DispatchProfiler:
 
     def trigger(self) -> None:
         """One aggregation trigger committed (runtime hook)."""
-        self.triggers += 1
+        with self._trigger_lock:
+            self.triggers += 1
 
     # ---- reading -----------------------------------------------------------
 

@@ -933,6 +933,14 @@ class EventDrivenRuntime:
             # fused commit below issues 1 (fused) or 2 (fallback) device
             # programs for this one aggregation trigger
             prof.trigger()
+        # scenario-batched sweeps (DESIGN.md §13): this runtime is one of
+        # several whose dispatches multiplex through a shared
+        # DispatchBatcher; its profiler counts *physical* programs, so
+        # every scenario's trigger feeds the shared denominator
+        dispatcher = getattr(self.sim, "dispatcher", None)
+        bprof = getattr(dispatcher, "profiler", None)
+        if bprof is not None:
+            bprof.trigger()
         t_trigger = t_agg
         out = fls._fused_commit(self.prog, self.beta, ids_np, participants,
                                 t_agg, used, late, train_epoch=rnd.beta)

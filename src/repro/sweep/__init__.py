@@ -1,0 +1,18 @@
+"""Batched scenario engine (DESIGN.md §13): Monte-Carlo sweeps over
+seeds / geometry / link rates / trigger policies / staleness functions
+run as a handful of shared device dispatches instead of sequential
+benchmark rows, with percentile-band reduction — and a differential
+parity contract pinning batched == sequential bit-identically."""
+from repro.sweep.batch import BatchedProgram, DispatchBatcher
+from repro.sweep.driver import ScenarioResult, run_scenarios
+from repro.sweep.scenario import ScenarioSpec, draw, draw_spec, grid
+from repro.sweep.stats import percentile_bands, reduce_results
+from repro.sweep.testbed import (ConvergingTrainer, MeanDistanceEvaluator,
+                                 make_model)
+
+__all__ = [
+    "BatchedProgram", "DispatchBatcher", "ScenarioResult", "ScenarioSpec",
+    "ConvergingTrainer", "MeanDistanceEvaluator", "make_model",
+    "draw", "draw_spec", "grid", "percentile_bands", "reduce_results",
+    "run_scenarios",
+]

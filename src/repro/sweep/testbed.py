@@ -1,0 +1,79 @@
+"""The deterministic fused-protocol trainer/evaluator the scheduler
+benchmarks and the sweep engine share.
+
+These lived in ``benchmarks/sched_bench.py`` since PR 3; the sweep
+engine needs them importable (``repro.sweep.testbed``), and the batched
+driver needs the trainer to declare a ``scenario_batch_key`` — the
+equivalence class under which different scenarios' epoch dispatches may
+share one physical program.  Two trainers with equal keys MUST run
+identical device math (same ``epoch_train_fn`` graph for the same
+inputs); the DispatchBatcher executes a whole group through one of their
+programs.  Trainers without the attribute (key ``None``) always run
+solo — correct, just unbatched.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.modelbank import FlatSpec, flatten_tree
+
+
+def make_model(key_seed: int = 0, width: int = 64):
+    rng = np.random.default_rng(key_seed)
+    return {
+        "w1": rng.standard_normal((width, width)).astype(np.float32) * 0.0,
+        "w2": rng.standard_normal((width, width)).astype(np.float32) * 0.0,
+        "b": np.zeros((width,), np.float32),
+    }
+
+
+class ConvergingTrainer:
+    """Deterministic fused-protocol trainer: every local step moves the
+    model halfway toward the all-ones optimum (plus a zero-mean per-sat
+    perturbation), so accuracy-vs-epoch is identical across policies and
+    the measured difference is PURE scheduling delay."""
+
+    def __init__(self, w0, rate: float = 0.5, jitter: float = 1e-3):
+        self.spec = FlatSpec.of(w0)
+        self._rate = rate
+        self._jitter = jitter
+        # scenarios whose trainers share this key run identical device
+        # math, so their epoch dispatches may be batched together
+        self.scenario_batch_key = ("converging", float(rate), float(jitter))
+
+    def data_size(self, sat: int) -> int:
+        return 100 + (sat % 7) * 10
+
+    def epoch_inputs(self, ids_np):
+        return None
+
+    def epoch_train_fn(self):
+        rate, jitter = self._rate, self._jitter
+
+        def _fn(params, inputs, ids, seed):
+            flat = flatten_tree(params)
+            # zero-mean per-(sat, seed) jitter: cancels in aggregation up
+            # to weighting differences, so policies stay comparable
+            phase = ((ids * 37 + seed.astype(jnp.int32)) % 13
+                     - 6).astype(jnp.float32) * jitter
+            stack = (flat[None, :] * (1.0 - rate) + rate
+                     + phase[:, None])
+            return stack, jnp.zeros(ids.shape[0])
+        return _fn
+
+    def train_many_stacked(self, sats, params, seed):   # stacked protocol
+        from repro.core.modelbank import ModelBank, pad_bucket_ids
+        ids, n = pad_bucket_ids(list(sats))
+        fn = self.epoch_train_fn()
+        stack, _ = fn(params, None, jnp.asarray(ids),
+                      jnp.uint32(np.uint32(seed)))
+        return ModelBank(self.spec, stack[:n]), np.zeros(n)
+
+
+class MeanDistanceEvaluator:
+    """acc = 1 - mean|w - 1| (clipped): 0 at w0 = zeros, 1 at the optimum."""
+
+    def __call__(self, params) -> float:
+        flat = np.asarray(flatten_tree(params))
+        return 1.0 - min(1.0, float(np.mean(np.abs(flat - 1.0))))

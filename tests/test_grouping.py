@@ -51,3 +51,53 @@ def test_grouping_state_incremental():
 def test_grouping_deterministic():
     d = {i: float(v) for i, v in enumerate([3, 1, 4, 1.5, 9, 2.6, 5.8])}
     assert group_by_gaps(d, 3) == group_by_gaps(dict(reversed(list(d.items()))), 3)
+
+
+def test_observe_orbits_multi_matches_single_stack():
+    """Models split across two device matrices (the epoch's training
+    bank + a carried-stragglers matrix, with -1 sentinel rows) must
+    yield the SAME distances and group assignments as the one-stack
+    ``observe_orbits`` over the concatenated models."""
+    import jax.numpy as jnp
+    from repro.core.modelbank import FlatSpec, ModelBank
+
+    models = [_model(v) for v in (0.2, 0.4, 5.0, 7.0)]
+    sizes = [1.0, 3.0, 1.0, 1.0]
+    orbit_indices = {10: [0, 1], 11: [2, 3]}
+    spec = FlatSpec.of(models[0])
+    flats = np.stack([np.asarray(flatten_model(m)) for m in models])
+
+    ref = GroupingState(num_groups=2)
+    ref.set_reference(_model(0.0))
+    expected = ref.observe_orbits(orbit_indices,
+                                  ModelBank(spec, jnp.asarray(flats)),
+                                  sizes)
+
+    # models 0, 2 live in segment A (rows 0, 1); models 1, 3 in B
+    seg_a = jnp.asarray(flats[[0, 2]])
+    seg_b = jnp.asarray(flats[[1, 3]])
+    rows_a = [0, -1, 1, -1]
+    rows_b = [-1, 0, -1, 1]
+    gs = GroupingState(num_groups=2)
+    gs.set_reference(_model(0.0))
+    got = gs.observe_orbits_multi(orbit_indices,
+                                  [(seg_a, rows_a), (seg_b, rows_b)],
+                                  sizes)
+    assert got == expected
+    assert gs.distances == pytest.approx(ref.distances)
+    # a None / empty segment contributes nothing rather than crashing
+    gs2 = GroupingState(num_groups=2)
+    gs2.set_reference(_model(0.0))
+    got2 = gs2.observe_orbits_multi(
+        orbit_indices,
+        [(None, rows_a), (seg_a, rows_a), (seg_b, rows_b)], sizes)
+    assert got2 == expected
+
+
+def test_observe_orbits_multi_known_orbits_skip_device_work():
+    gs = GroupingState(num_groups=2)
+    gs.set_reference(_model(0.0))
+    gs.observe_orbit(5, [_model(1.0)], [1.0])
+    # all orbits known: no segments touched at all (stack=None is fine)
+    out = gs.observe_orbits_multi({5: [0]}, [(None, [-1])], [1.0])
+    assert out == {5: gs.group_of(5)}

@@ -47,3 +47,23 @@ def test_fso_link():
     assert l.transmission_delay(3.2e6) < 1e-3
     assert LinkModel().transmission_delay(3.2e6) == pytest.approx(0.2)
     assert l.carrier_freq_hz > 1e14                 # optical
+
+
+def test_busy_interval_edge_times():
+    """Channel occupancy is the transmission time ONLY: propagation and
+    processing delay the payload, not the transmitter (DESIGN.md §9)."""
+    lm = LinkModel()
+    t0, t1 = lm.busy_interval(100.0, 16e6)
+    assert t0 == 100.0                       # starts exactly at t_start
+    assert t1 - t0 == pytest.approx(lm.transmission_delay(16e6))
+    # strictly shorter than the payload's end-to-end latency
+    assert t1 - t0 < lm.total_delay(16e6, 2000e3)
+    # zero-bit transfer: a zero-length interval anchored at t_start
+    z0, z1 = lm.busy_interval(7.5, 0.0)
+    assert z0 == z1 == 7.5
+    # occupancy scales linearly with payload and inversely with rate
+    a = lm.busy_interval(0.0, 32e6)
+    b = lm.busy_interval(0.0, 16e6)
+    assert a[1] == pytest.approx(2 * b[1])
+    fast = LinkModel(rate_bps=32e6).busy_interval(0.0, 32e6)
+    assert fast[1] == pytest.approx(b[1])

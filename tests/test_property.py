@@ -270,3 +270,34 @@ def test_arrival_conservation_ledger(seed, loss, burst, outage, energy,
         len(r.expected) for r in rt.rounds.values() if not r.committed)
     assert s["arrivals_expected"] == (
         s["arrivals_committed"] + dropped + leftover)
+
+
+# ---- batched scenario engine parity (DESIGN.md §13) ------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(data=st.data())
+def test_batched_sweep_parity_property(data):
+    """The sweep engine's differential contract, under randomly drawn
+    scenario batches over five axes — seed, constellation geometry,
+    link rate, trigger policy (strategy) and staleness function: the
+    batched engine's per-scenario histories, final weights and logical
+    dispatch counts are BIT-identical to running each scenario
+    sequentially through the event-driven runtime (the shared checker
+    in test_sweep.py; `mode="exact"` unrolls the same per-scenario HLO
+    into one program, so this is equality, not allclose)."""
+    import dataclasses as _dc
+
+    from test_sweep import BASE as SWEEP_BASE, assert_batched_parity
+
+    n = data.draw(st.integers(min_value=2, max_value=4))
+    specs = tuple(_dc.replace(
+        SWEEP_BASE,
+        seed=data.draw(st.integers(min_value=0, max_value=5)),
+        num_orbits=data.draw(st.sampled_from([2, 3])),
+        rate_bps=data.draw(st.sampled_from([16e6, 1e5])),
+        strategy=data.draw(st.sampled_from(
+            ["asyncfleo-gs", "fedisl", "asyncfleo-pipelined",
+             "fedasync"])),
+        staleness_fn=data.draw(st.sampled_from(["eq13", "poly", "hinge"])),
+    ) for _ in range(n))
+    assert_batched_parity(list(specs), max_epochs=2)

@@ -51,3 +51,65 @@ def test_star_members_are_visible(topo):
 def test_ihl_distance_positive(topo):
     d = topo.ihl_distance(0, 1, 0.0)
     assert 1e5 < d < 1e7     # Rolla<->Portland ~2400 km
+
+
+@pytest.fixture(scope="module")
+def ring6():
+    """A synthetic 6-HAP ring (ring arithmetic only needs num_ps)."""
+    from repro.core.constellation import GroundNode
+    nodes = [GroundNode(f"HAP-{i}", 10.0 + 5 * i, -120.0 + 20 * i, 20e3,
+                        kind="hap") for i in range(6)]
+    return RingOfStars(paper_constellation(), nodes, None)
+
+
+def test_ring_hops_arc_symmetry(ring6):
+    # min(d, H-d) metric: symmetric, zero on self, wraps the shorter way
+    H = ring6.num_ps
+    for a in range(H):
+        for b in range(H):
+            assert ring6.ring_hops(a, b) == ring6.ring_hops(b, a)
+            assert ring6.ring_hops(a, b) <= H // 2
+    assert ring6.ring_hops(0, 5) == 1        # wraparound beats 5 forward
+    assert ring6.ring_hops(0, 3) == 3        # antipodal
+    assert [ring6.ring_hops(0, d) for d in range(6)] == [0, 1, 2, 3, 2, 1]
+
+
+def test_ring_path_matches_hops_and_ties(ring6):
+    for a in range(6):
+        for b in range(6):
+            path = ring6.ring_path(a, b)
+            assert path[0] == a and path[-1] == b
+            assert len(path) == ring6.ring_hops(a, b) + 1
+    # antipodal tie breaks toward increasing id
+    assert ring6.ring_path(0, 3) == [0, 1, 2, 3]
+
+
+def test_ring_path_via_takes_other_arc(ring6):
+    # shorter arc 0->2 is via 1; with 1 dark, route the long way round
+    assert ring6.ring_path_via(0, 2, avoid=()) == [0, 1, 2]
+    assert ring6.ring_path_via(0, 2, avoid=(1,)) == [0, 5, 4, 3, 2]
+    # endpoints are never checked against avoid
+    assert ring6.ring_path_via(0, 2, avoid=(0, 2)) == [0, 1, 2]
+    # both interiors blocked: unreachable
+    assert ring6.ring_path_via(0, 3, avoid=(1, 2, 4, 5)) is None
+
+
+def test_ring_relay_delay_arc_symmetry(ring6):
+    """Relay delay follows the ACTUAL arc: symmetric src<->dst on the
+    same arc, +inf when both arcs are blocked, and the detour arc costs
+    at least the clear shorter arc."""
+    from repro.core.links import LinkModel
+    from repro.core.propagation import PropagationModel
+    pm = PropagationModel(ring6, LinkModel())
+    bits = 3.2e6
+    d_fwd = pm.ring_relay_delay(bits, 0, 2, 0.0)
+    d_rev = pm.ring_relay_delay(bits, 2, 0, 0.0)
+    assert d_fwd > 0 and d_fwd == pytest.approx(d_rev, rel=1e-6)
+    d_detour = pm.ring_relay_delay(bits, 0, 2, 0.0, avoid=(1,))
+    assert d_detour > d_fwd                  # 4 hops vs 2
+    assert np.isinf(pm.ring_relay_delay(bits, 0, 3, 0.0,
+                                        avoid=(1, 2, 4, 5)))
+    # vectorized send times keep shape and stay causal
+    t0 = np.array([0.0, 600.0, 1200.0])
+    dv = pm.ring_relay_delay(bits, 0, 2, t0)
+    assert dv.shape == t0.shape and (dv > 0).all()
