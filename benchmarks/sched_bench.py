@@ -78,6 +78,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import FLSimulation, SimConfig, convergence_time
+from repro.core.constellation import WalkerDelta
 from repro.core.links import LinkModel
 from repro.fl.strategies import get_strategy
 from repro.obs import (DispatchProfiler, Tracer, add_runtime_tracks,
@@ -372,6 +373,54 @@ def outage_smoke(w0, target: float, max_epochs: int,
     return {"ps_outages": [list(dark)], "row": r}
 
 
+def scale_smoke(target: float, max_epochs: int, num_sats: int,
+                num_ps: int, duration_s: float = 86400.0,
+                dt_s: float = 30.0) -> Dict:
+    """Mega-constellation scale cell (DESIGN.md §14): a Starlink-class
+    S=10^4 shell over a P>=4 ``hapring`` of parameter servers compiles
+    its contact plan through the SPARSE segment timeline (the dense
+    (T, S, P) grid + (T, S, 3) positions would be gigabytes) and
+    completes a ``max_epochs``-epoch event-driven run.  The row reports
+    compile and run wall seconds separately; CI gates the total against
+    an explicit budget (``--scale-budget-s``) so scale cannot rot."""
+    spo = 250 if num_sats % 250 == 0 and num_sats >= 250 else num_sats
+    cst = WalkerDelta(num_orbits=num_sats // spo, sats_per_orbit=spo,
+                      altitude_m=550e3, inclination_deg=53.0)
+    spec = dataclasses.replace(get_strategy("asyncfleo-gs"),
+                               ps_scenario=f"hapring:{num_ps}")
+    w0 = make_model()
+    sim = SimConfig(duration_s=duration_s, dt_s=dt_s, train_time_s=300.0,
+                    use_model_bank=True, use_fused_step=True,
+                    event_driven=True, visibility="sparse")
+    t0 = time.perf_counter()
+    fls = FLSimulation(spec, ConvergingTrainer(w0),
+                       MeanDistanceEvaluator(), sim, constellation=cst)
+    rt = EventDrivenRuntime(fls)
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    hist = rt.run(w0, max_epochs=max_epochs, target_accuracy=target)
+    run_s = time.perf_counter() - t0
+    row = {
+        "num_sats": num_sats,
+        "num_ps": num_ps,
+        "duration_s": duration_s,
+        "dt_s": dt_s,
+        "visibility": "sparse",
+        "epochs": len(hist),
+        "final_accuracy": float(hist[-1].accuracy) if hist else None,
+        "fused_dispatches": fls._fused_prog.dispatches,
+        "event_counts": dict(rt.events.counts),
+        "plan": fls.plan.summary(),
+        "compile_wall_s": compile_s,
+        "run_wall_s": run_s,
+        "wall_s": compile_s + run_s,
+    }
+    print(f"scale smoke S={num_sats} P={num_ps}: compile {compile_s:.1f} s, "
+          f"{len(hist)} epochs in {run_s:.1f} s, "
+          f"{row['plan']['num_windows']} windows")
+    return row
+
+
 def _h(delay_s) -> str:
     return (f"{delay_s / 3600.0:6.2f}" if delay_s is not None
             else "  none")
@@ -544,6 +593,23 @@ def main():
     ap.add_argument("--cnn-target", type=float, default=0.55,
                     help="target test accuracy for the CNN study")
     ap.add_argument("--cnn-max-epochs", type=int, default=10)
+    ap.add_argument("--scale-sats", type=int, default=0,
+                    help="run the mega-constellation scale smoke cell at "
+                         "this constellation size over a hapring of "
+                         "--scale-ps parameter servers with sparse "
+                         "contact compilation (DESIGN.md §14); 0 = skip")
+    ap.add_argument("--scale-ps", type=int, default=4,
+                    help="parameter servers in the scale cell's hapring")
+    ap.add_argument("--scale-epochs", type=int, default=2,
+                    help="event-driven epochs the scale cell must commit")
+    ap.add_argument("--scale-budget-s", type=float, default=0.0,
+                    help="explicit wall-clock budget for the scale cell "
+                         "(compile + run); exceeded => exit 1, so scale "
+                         "cannot rot (0 = report only, no gate)")
+    ap.add_argument("--scale-only", action="store_true",
+                    help="run ONLY the scale smoke cell (the CI scale "
+                         "step: everything else lives in the main "
+                         "benchmark invocation)")
     ap.add_argument("--sweep", type=int, default=0,
                     help="run the batched Monte-Carlo policy sweep with "
                          "this many seeds per policy cell (DESIGN.md "
@@ -554,6 +620,26 @@ def main():
                          "plus a physical<logical dispatch-economy gate; "
                          "0 = skip (single-seed gates)")
     args = ap.parse_args()
+
+    if args.scale_only:
+        if not args.scale_sats:
+            raise SystemExit("--scale-only requires --scale-sats")
+        row = scale_smoke(args.target, args.scale_epochs,
+                          args.scale_sats, args.scale_ps)
+        report = {"scale_smoke": row}
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.out}")
+        if row["epochs"] < args.scale_epochs:
+            raise SystemExit(
+                f"scale smoke committed only {row['epochs']} epochs "
+                f"(expected {args.scale_epochs})")
+        if args.scale_budget_s and row["wall_s"] > args.scale_budget_s:
+            raise SystemExit(
+                f"scale smoke wall clock {row['wall_s']:.1f} s exceeded "
+                f"the {args.scale_budget_s:.0f} s budget "
+                f"(S={args.scale_sats}, P={args.scale_ps})")
+        return
 
     w0 = make_model()
     main_channels = (args.ps_channels if args.ps_channels
@@ -621,9 +707,24 @@ def main():
                                         args.cnn_max_epochs,
                                         args.days * 86400.0)
 
+    if args.scale_sats:
+        report["scale_smoke"] = scale_smoke(
+            args.target, args.scale_epochs, args.scale_sats, args.scale_ps)
+
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {args.out}")
+
+    if args.scale_sats:
+        row = report["scale_smoke"]
+        if row["epochs"] < args.scale_epochs:
+            raise SystemExit(
+                f"scale smoke committed only {row['epochs']} epochs "
+                f"(expected {args.scale_epochs})")
+        if args.scale_budget_s and row["wall_s"] > args.scale_budget_s:
+            raise SystemExit(
+                f"scale smoke wall clock {row['wall_s']:.1f} s exceeded "
+                f"the {args.scale_budget_s:.0f} s budget")
 
     if args.fail_if_not_lower:
         if args.sweep:

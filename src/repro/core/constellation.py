@@ -140,7 +140,19 @@ def paper_constellation() -> WalkerDelta:
 
 
 def make_ps_nodes(scenario: str) -> List[GroundNode]:
-    """'gs' | 'hap' | 'twohap' | 'gs-np' (ideal-setup baselines)."""
+    """'gs' | 'hap' | 'twohap' | 'gs-np' (ideal-setup baselines), plus the
+    parametric 'hapring:N' mega-constellation scenario: N >= 1 HAPs at
+    20 km spread evenly in longitude at the Rolla latitude, forming a
+    P = N parameter-server ring (§IV-A ring-of-stars at scale)."""
+    if scenario.startswith("hapring:"):
+        n = int(scenario.split(":", 1)[1])
+        if n < 1:
+            raise ValueError(scenario)
+        lat, lon0 = ROLLA
+        return [GroundNode(f"HAP-ring{k}", lat,
+                           ((lon0 + 360.0 * k / n + 180.0) % 360.0) - 180.0,
+                           20e3, kind="hap")
+                for k in range(n)]
     if scenario == "gs":
         return [GroundNode("GS-Rolla", *ROLLA, 0.0)]
     if scenario == "hap":

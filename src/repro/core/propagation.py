@@ -196,7 +196,7 @@ class PropagationModel:
         hap = np.full(P, -1, dtype=np.int64)
 
         # --- direct: the satellite sees a HAP at t_done ---------------------
-        vis = tl.grid[ti, sats, :]                               # (P, H)
+        vis = tl.visible_rows(ti, sats)                          # (P, H)
         direct = vis.any(axis=1)
         if direct.any():
             di = np.flatnonzero(direct)
@@ -212,7 +212,7 @@ class PropagationModel:
         if len(rest):
             orb = sats[rest] // N
             mates = orb[:, None] * N + np.arange(N)[None, :]     # (Q, N)
-            mate_vis = tl.grid[ti[rest][:, None], mates, :]      # (Q, N, H)
+            mate_vis = tl.visible_rows(ti[rest][:, None], mates)  # (Q, N, H)
             mate_any = mate_vis.any(axis=2)                      # (Q, N)
             has_mate = mate_any.any(axis=1)
             if has_mate.any():

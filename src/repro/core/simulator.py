@@ -93,6 +93,14 @@ class SimConfig:
     # None (the default) attaches nothing — the sequential path is
     # untouched (the batched-vs-sequential parity contract)
     dispatcher: Optional[object] = None
+    # contact-plan geometry backend (DESIGN.md §14): "dense" precomputes
+    # the (T, S, P) visibility grid; "sparse" compiles per-(sat, PS)
+    # window segments coarse-to-fine and answers every query by bisect —
+    # O(windows) memory, required at mega-constellation scale.  Sparse is
+    # pinned bit-identical to dense (windows, queries, runtime histories)
+    # but cannot host fault grid-masks (eclipse/outage masks mutate the
+    # dense grid in place), so those combinations raise at construction
+    visibility: str = "dense"
 
 
 @dataclasses.dataclass
@@ -135,8 +143,16 @@ class FLSimulation:
         self.sim = sim
         self.constellation = constellation or paper_constellation()
         self.nodes = make_ps_nodes(spec.ps_scenario)
-        self.timeline = VisibilityTimeline(self.constellation, self.nodes,
-                                           sim.duration_s, sim.dt_s)
+        visibility = getattr(sim, "visibility", "dense")
+        if visibility == "sparse":
+            from repro.core.visibility import SparseVisibilityTimeline
+            self.timeline = SparseVisibilityTimeline(
+                self.constellation, self.nodes, sim.duration_s, sim.dt_s)
+        elif visibility == "dense":
+            self.timeline = VisibilityTimeline(
+                self.constellation, self.nodes, sim.duration_s, sim.dt_s)
+        else:
+            raise ValueError(f"visibility must be dense|sparse: {visibility}")
         # fault/heterogeneity layer (DESIGN.md §10): eclipse windows mask
         # the visibility grid BEFORE anything derives state from it, so
         # contact windows, downlink stars, relay seeds and uplinks all
@@ -151,6 +167,11 @@ class FLSimulation:
             self._train_scale = self.fault.train_time_scale(S)
             mask = self.fault.availability_mask(self.timeline.times, S)
             if mask is not None:
+                if visibility == "sparse":
+                    raise ValueError(
+                        "sparse visibility cannot host eclipse/outage "
+                        "grid-masks — use visibility='dense' with this "
+                        "fault model")
                 self.timeline.grid &= mask[:, :, None]
             # PS outage windows (DESIGN.md §11) mask the PS axis the same
             # way — a dark parameter server has no satellite contacts —
@@ -161,6 +182,11 @@ class FLSimulation:
                                            len(self.nodes), sim.duration_s)
             if omask is not None:
                 from repro.sched.faults import OutageSchedule
+                if visibility == "sparse":
+                    raise ValueError(
+                        "sparse visibility cannot host eclipse/outage "
+                        "grid-masks — use visibility='dense' with this "
+                        "fault model")
                 self.timeline.grid &= omask[:, None, :]
                 self._outages = OutageSchedule(
                     self.fault.outage_intervals(len(self.nodes),

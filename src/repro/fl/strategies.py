@@ -39,7 +39,7 @@ class StrategySpec:
     use_isl: bool
     grouping: bool
     agg_mode: str                    # asyncfleo | fedavg | per_arrival | interval
-    ps_scenario: str                 # gs | hap | twohap | gs-np
+    ps_scenario: str                 # gs | hap | twohap | gs-np | hapring:N
     interval_s: float = 1800.0       # for agg_mode == interval
     num_groups: int = 3
     strict_paper_eq14: bool = False

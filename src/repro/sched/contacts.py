@@ -11,9 +11,10 @@ the plan instead of re-deriving geometry.
 ``ContactPlan`` bundles three things:
 
 * **windows** — run-length-encoded sat<->PS visibility intervals
-  ``[t_start, t_end)`` (from ``VisibilityTimeline.grid``), each annotated
-  with the one-hop link delay at window start for a nominal payload.
-  Compiled lazily (one pass over the grid) and cached.
+  ``[t_start, t_end)`` (from the timeline's ``node_windows`` segment
+  export — dense-grid RLE or the sparse timeline's precompiled
+  segments, DESIGN.md §14), each annotated with the one-hop link delay
+  at window start for a nominal payload.  Compiled lazily and cached.
 * **ISL / IHL availability** — intra-orbit ISL rings are permanently
   available (adjacent neighbors, §IV-A), so they are a constant hop delay,
   not windows; the HAP ring likewise.
@@ -52,7 +53,8 @@ from repro.core.constellation import GroundNode, WalkerDelta
 from repro.core.links import LinkModel
 from repro.core.propagation import PropagationModel
 from repro.core.topology import RingOfStars
-from repro.core.visibility import VisibilityTimeline
+from repro.core.visibility import (SparseVisibilityTimeline,
+                                   VisibilityTimeline)
 from repro.obs.metrics import Histogram
 
 
@@ -280,8 +282,9 @@ class ContactPlan:
 
     _windows: Optional[List[ContactWindow]] = dataclasses.field(
         default=None, repr=False)
-    _node_vis: Optional[List[np.ndarray]] = dataclasses.field(
-        default=None, repr=False)      # per-PS sorted any-sat-visible times
+    _node_vis: Optional[List[Tuple[np.ndarray, np.ndarray]]] = \
+        dataclasses.field(default=None, repr=False)
+    # ^ per-PS merged any-sat coverage runs (lo, hi), rows, hi exclusive
 
     # ---- construction ------------------------------------------------------
 
@@ -289,8 +292,15 @@ class ContactPlan:
     def compile(cls, constellation: WalkerDelta, nodes: List[GroundNode],
                 duration_s: float, dt_s: float = 10.0,
                 link: Optional[LinkModel] = None, *, use_isl: bool = True,
-                nominal_bits: float = 0.0) -> "ContactPlan":
-        timeline = VisibilityTimeline(constellation, nodes, duration_s, dt_s)
+                nominal_bits: float = 0.0,
+                visibility: str = "dense") -> "ContactPlan":
+        """``visibility="sparse"`` compiles through the segment-based
+        :class:`SparseVisibilityTimeline` — O(windows) memory instead of
+        the dense (T, S, P) grid; windows and all plan queries are pinned
+        bit-identical (DESIGN.md §14)."""
+        tl_cls = {"dense": VisibilityTimeline,
+                  "sparse": SparseVisibilityTimeline}[visibility]
+        timeline = tl_cls(constellation, nodes, duration_s, dt_s)
         topo = RingOfStars(constellation, nodes, timeline)
         prop = PropagationModel(topo, link or LinkModel())
         return cls(constellation, nodes, timeline, topo, prop,
@@ -306,26 +316,15 @@ class ContactPlan:
 
     def _compile_windows(self) -> List[ContactWindow]:
         tl = self.timeline
-        grid = tl.grid                                   # (T, S, P) bool
-        T = grid.shape[0]
+        T = len(tl.times)
         dt = tl.dt_s
         out: List[ContactWindow] = []
-        # per (node) batched RLE: transitions of the padded column
-        for p in range(grid.shape[2]):
-            col = grid[:, :, p]                          # (T, S)
-            pad = np.zeros((1, col.shape[1]), dtype=np.int8)
-            d = np.diff(np.concatenate([pad, col.astype(np.int8), pad]),
-                        axis=0)                          # (T+1, S)
-            starts = np.argwhere(d == 1)                 # (n, 2): (row, sat)
-            ends = np.argwhere(d == -1)
-            if len(starts) == 0:
+        # per-node windows from the timeline's segment export — dense RLE
+        # or the sparse timeline's precompiled segments, identically shaped
+        for p in range(len(self.nodes)):
+            s_sats, s_rows, e_rows = tl.node_windows(p)
+            if len(s_sats) == 0:
                 continue
-            # argwhere is row-major sorted; regroup per sat so the k-th
-            # start pairs with the k-th end of the same column
-            order_s = np.lexsort((starts[:, 0], starts[:, 1]))
-            order_e = np.lexsort((ends[:, 0], ends[:, 1]))
-            s_rows, s_sats = starts[order_s, 0], starts[order_s, 1]
-            e_rows = ends[order_e, 0]
             t0 = tl.times[s_rows]
             # exclusive end: one step past the last visible sample, clamped
             t1 = tl.times[np.minimum(e_rows, T - 1)]
@@ -349,7 +348,8 @@ class ContactPlan:
     def is_degenerate(self) -> bool:
         """True when every satellite sees a PS at every grid step — the
         all-visible plan used by the runtime-vs-epoch-loop parity tests."""
-        return bool(self.timeline.grid.any(axis=2).all())
+        tl = self.timeline
+        return tl.covered_steps() == len(tl.times) * self.num_sats
 
     def isl_hop_delay(self, bits: float) -> float:
         """Intra-orbit ISL ring hop delay (permanently available)."""
@@ -366,16 +366,21 @@ class ContactPlan:
         of the horizon.  This is the multi-sink handoff signal
         (DESIGN.md §8): `sched/policies.NextContactHandoff` opens the
         next round at the HAP that can start talking soonest.  The
-        per-node visible-step index is built once and cached."""
+        per-node coverage runs are built once and cached; each query is
+        then two bisects per node instead of an O(T) scan."""
         if self._node_vis is None:
-            any_sat = self.timeline.grid.any(axis=1)         # (T, P)
-            self._node_vis = [self.timeline.times[any_sat[:, p]]
-                              for p in range(any_sat.shape[1])]
+            self._node_vis = [self.timeline.node_cover(p)
+                              for p in range(len(self.nodes))]
+        times = self.timeline.times
+        T = len(times)
+        row_min = int(np.searchsorted(times, t, side="left"))
         out = np.full(len(self._node_vis), np.inf)
-        for p, times in enumerate(self._node_vis):
-            i = int(np.searchsorted(times, t, side="left"))
-            if i < len(times):
-                out[p] = times[i]
+        for p, (lo, hi) in enumerate(self._node_vis):
+            i = int(np.searchsorted(hi, row_min, side="right"))
+            if i < len(lo):
+                row = max(int(lo[i]), row_min)
+                if row < T:
+                    out[p] = times[row]
         return out
 
     def next_any_contact(self, t: float) -> Optional[float]:
@@ -388,7 +393,8 @@ class ContactPlan:
 
     def coverage_fraction(self) -> float:
         """Mean fraction of grid steps with any PS in view, over sats."""
-        return float(self.timeline.grid.any(axis=2).mean())
+        tl = self.timeline
+        return float(tl.covered_steps() / (len(tl.times) * self.num_sats))
 
     def summary(self) -> Dict:
         """Plan statistics for benchmarks / exports (windows compiled on

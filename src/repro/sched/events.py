@@ -36,6 +36,18 @@ carried-straggler set instead (§8 late-arrival semantics).
 sequence number makes same-instant pops deterministic (FIFO), which the
 runtime-vs-epoch-loop parity tests rely on.  Events are immutable;
 handlers look up mutable round state on the runtime by ``round_idx``.
+
+**Batched pops** (DESIGN.md §14): ``pop_batch`` drains the maximal FIFO
+run of events sharing (time, kind, round_idx) at the heap top — the
+shape a mega-constellation trigger produces (10^4 MODEL_ARRIVALs in one
+dt-slice) — so the runtime touches Python round state once per run, not
+once per satellite.  Batching is bit-exact by construction: any event a
+run member's handler pushes has time >= t and a sequence number greater
+than every remaining run member's (those were pushed earlier), so it
+can never pop before the rest of the run; and since pops don't consume
+sequence numbers, every push gets the same sequence number it would
+have gotten one-at-a-time.  Histories are therefore identical to the
+unbatched loop (the tier-1 parity pins).
 """
 from __future__ import annotations
 
@@ -95,8 +107,29 @@ class EventQueue:
         heapq.heappush(self._heap, (ev.time, self._seq, ev))
         self._seq += 1
 
+    def push_many(self, evs: List[Event]) -> None:
+        """Bulk push preserving per-event FIFO order: event i of ``evs``
+        gets the exact sequence number it would get from ``push`` calls
+        in the same order."""
+        for ev in evs:
+            self.push(ev)
+
     def pop(self) -> Event:
         return heapq.heappop(self._heap)[2]
+
+    def pop_batch(self) -> List[Event]:
+        """Pop the maximal run of events sharing (time, kind, round_idx)
+        with the heap top, in FIFO (sequence) order.  Always returns at
+        least one event; a single-element list degrades to ``pop``."""
+        t0, _seq, ev = heapq.heappop(self._heap)
+        out = [ev]
+        heap = self._heap
+        while heap and heap[0][0] == t0:
+            nxt = heap[0][2]
+            if nxt.kind != ev.kind or nxt.round_idx != ev.round_idx:
+                break
+            out.append(heapq.heappop(heap)[2])
+        return out
 
     def peek_time(self) -> Optional[float]:
         return self._heap[0][0] if self._heap else None

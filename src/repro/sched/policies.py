@@ -136,6 +136,33 @@ class AsyncFLEOPolicy:
         return min(t + self._scaled(rt, rnd, t, self.window_s(rt, g)),
                    rt.sim.duration_s)
 
+    def on_arrival_batch(self, rt, rnd, t: float, sats) -> List[
+            Optional[float]]:
+        """Batched ``on_arrival`` for a same-instant arrival run
+        (DESIGN.md §14).  Contract shared by every policy: the policy
+        performs the per-arrival ``rnd.arrived_count`` increments itself
+        and returns one trigger (or None) per arrival, exactly what the
+        sequential increment-then-call loop would have produced — in
+        particular it must account for the runtime's between-arrival
+        ``trigger_scheduled`` updates.  Here: without group deadlines
+        only the FIRST arrival of the run can open the window (the
+        sequential loop sets ``trigger_scheduled`` before the second
+        call); with groups, per-arrival calls are already independent of
+        ``trigger_scheduled`` and delegate unchanged."""
+        if not self.group_timeouts:
+            rnd.arrived_count += len(sats)
+            out: List[Optional[float]] = [None] * len(sats)
+            if rnd.trigger_scheduled is None:
+                out[0] = min(
+                    t + self._scaled(rt, rnd, t, rt.sim.agg_timeout_s),
+                    rt.sim.duration_s)
+            return out
+        out = []
+        for s in sats:
+            rnd.arrived_count += 1
+            out.append(self.on_arrival(rt, rnd, t, sat=s))
+        return out
+
     def split(self, rt, rnd, t_fired: float):
         if not self.group_timeouts and self.rx_backlog_threshold_s is None:
             # delegate to the epoch loop's trigger: identical aggregation
@@ -186,6 +213,19 @@ class SyncBarrierPolicy:
             return t                         # barrier complete: fire now
         return None
 
+    def on_arrival_batch(self, rt, rnd, t: float, sats) -> List[
+            Optional[float]]:
+        """Sequential semantics: the count walks base+1 .. base+n and the
+        barrier fires at the single index where it equals the expected
+        size — a naive increment-all-then-test would fire every arrival
+        of the completing run (duplicate TRIGGER pushes, sequence-number
+        drift, broken bit-parity)."""
+        base = rnd.arrived_count
+        n_exp = len(rnd.expected)
+        rnd.arrived_count = base + len(sats)
+        return [t if base + i + 1 == n_exp else None
+                for i in range(len(sats))]
+
     def split(self, rt, rnd, t_fired: float):
         return rt.fls._trigger(rnd.expected, rnd.t_start)
 
@@ -218,6 +258,14 @@ class FedAsyncPolicy:
     def on_arrival(self, rt, rnd, t: float, sat: int = -1
                    ) -> Optional[float]:
         return t
+
+    def on_arrival_batch(self, rt, rnd, t: float, sats) -> List[
+            Optional[float]]:
+        # every arrival fires: n triggers at t, pushed in arrival order
+        # by the runtime's batch tail — same sequence numbers as the
+        # sequential loop's per-arrival pushes
+        rnd.arrived_count += len(sats)
+        return [t] * len(sats)
 
     def split(self, rt, rnd, t_fired: float):
         if not rnd.committed:

@@ -297,11 +297,30 @@ class EventDrivenRuntime:
         }
         tracer = self.tracer
         t_last = 0.0
+        # batched pops (DESIGN.md §14): same-(time, kind, round) runs —
+        # the MODEL_ARRIVAL floods a mega-constellation trigger produces —
+        # drain as one batch through a vectorized handler tail instead of
+        # one Python heap pop + handler dispatch per satellite.  The
+        # run's events are exactly the pops the sequential loop would do
+        # consecutively (nothing else can sort between them), and the
+        # batch handlers reproduce the per-event push order, so sequence
+        # numbers and histories stay bit-identical
         while self.events and not self._stop:
-            ev = self.events.pop()
+            evs = self.events.pop_batch()
             if tracer.enabled:
-                t_last = max(t_last, ev.time)
-            handlers[ev.kind](ev)
+                t_last = max(t_last, evs[0].time)
+            if len(evs) == 1:
+                handlers[evs[0].kind](evs[0])
+            elif evs[0].kind == EventKind.TRAIN_DONE:
+                self._on_train_done_batch(evs)
+            elif evs[0].kind == EventKind.MODEL_ARRIVAL:
+                self._on_arrival_batch(evs)
+            else:
+                h = handlers[evs[0].kind]
+                for ev in evs:
+                    if self._stop:
+                        break
+                    h(ev)
         # finalize the timeline: rounds still alive at the horizon close
         # at the last processed instant so every opened span exports
         tracer.close_open_spans(t_last)
@@ -513,6 +532,64 @@ class EventDrivenRuntime:
             return
         self.events.push(Event(ta, EventKind.MODEL_ARRIVAL, rnd.idx,
                                sat=ev.sat, row=ev.row, ps=rnd.open_sink))
+
+    def _on_train_done_batch(self, evs: List[Event]) -> None:
+        """Batched TRAIN_DONE run (same time + round, DESIGN.md §14).
+        With energy or loss faults active the per-event handler runs
+        one-at-a-time (those paths draw per-sat state in event order);
+        otherwise every member just converts to its MODEL_ARRIVAL push —
+        one bulk ``push_many`` with per-event order preserved, which is
+        exactly the sequential loop's push sequence."""
+        if self.energy is not None or (self.fault is not None
+                                       and self.fault.has_loss):
+            for ev in evs:
+                self._on_train_done(ev)
+            return
+        rnd = self.rounds[evs[0].round_idx]
+        out = []
+        for ev in evs:
+            ta = rnd.arr_time.get(ev.row)
+            if ta is None or not np.isfinite(ta):
+                continue
+            out.append(Event(ta, EventKind.MODEL_ARRIVAL, rnd.idx,
+                             sat=ev.sat, row=ev.row, ps=rnd.open_sink))
+        self.events.push_many(out)
+
+    def _on_arrival_batch(self, evs: List[Event]) -> None:
+        """Batched MODEL_ARRIVAL run (same time + round, DESIGN.md §14):
+        one closed-round check, one ``policy.on_arrival_batch`` call, one
+        trigger-application tail — instead of 10^4 per-event handler
+        invocations.  Outage reroutes, tracing, and adaptive backoff keep
+        the per-event path (they mutate per-event state mid-run)."""
+        if (self._outages is not None or self.tracer.enabled
+                or (self.fault is not None and self.fault.adaptive_backoff)):
+            for ev in evs:
+                self._on_arrival(ev)
+            return
+        rnd = self.rounds[evs[0].round_idx]
+        if rnd.closed:
+            self.stats["closed_round_arrivals"] += len(evs)
+            return
+        t = evs[0].time
+        batch_fn = getattr(self.policy, "on_arrival_batch", None)
+        if batch_fn is None:
+            # custom policy without the batch protocol: stay exactly
+            # sequential (its on_arrival may read trigger_scheduled
+            # between arrivals)
+            for ev in evs:
+                self._on_arrival(ev)
+            return
+        trigs = batch_fn(self, rnd, t, [ev.sat for ev in evs])
+        # the sequential loop's per-arrival tail, applied in run order:
+        # the earliest trigger wins the schedule, every non-None trigger
+        # still pushes (identical TRIGGER_TIMEOUT sequence numbers)
+        for trig in trigs:
+            if trig is not None:
+                if (rnd.trigger_scheduled is None
+                        or trig < rnd.trigger_scheduled):
+                    rnd.trigger_scheduled = trig
+                self.events.push(Event(trig, EventKind.TRIGGER_TIMEOUT,
+                                       rnd.idx))
 
     def _on_arrival(self, ev: Event) -> None:
         rnd = self.rounds[ev.round_idx]

@@ -1,0 +1,128 @@
+"""EventQueue ordering contracts (DESIGN.md §14).
+
+Batched event processing rests on two properties that used to be
+implicit: (1) equal-timestamp events pop in push (FIFO) order across
+EVERY event kind — the (time, sequence) heap key; (2) ``pop_batch``
+drains exactly the maximal same-(time, kind, round) run the sequential
+loop would have popped consecutively, in the same order.  These tests
+pin both so a heap-key or batching regression cannot silently reorder
+histories.
+"""
+import random
+
+import pytest
+
+from repro.sched.events import Event, EventKind, EventQueue
+
+ALL_KINDS = list(EventKind)
+
+
+def _drain_pop(q: EventQueue):
+    out = []
+    while q:
+        out.append(q.pop())
+    return out
+
+
+def _drain_batch(q: EventQueue):
+    out = []
+    while q:
+        batch = q.pop_batch()
+        assert len(batch) >= 1
+        # batch invariant: one (time, kind, round_idx) per batch
+        assert len({(e.time, e.kind, e.round_idx) for e in batch}) == 1
+        out.extend(batch)
+    return out
+
+
+def test_equal_timestamp_fifo_all_kinds():
+    """Events of every kind pushed at ONE instant pop in exact push
+    order — the FIFO tie-break the runtime's bit-parity depends on."""
+    q = EventQueue()
+    pushed = []
+    rng = random.Random(7)
+    for i in range(200):
+        kind = rng.choice(ALL_KINDS)
+        ev = Event(100.0, kind, round_idx=rng.randrange(3), sat=i)
+        q.push(ev)
+        pushed.append(ev)
+    assert _drain_pop(q) == pushed
+
+
+def test_equal_timestamp_fifo_within_time_groups():
+    """FIFO holds within each timestamp group under interleaved pushes
+    of mixed times."""
+    q = EventQueue()
+    rng = random.Random(11)
+    pushed = []
+    for i in range(300):
+        t = float(rng.choice([10.0, 20.0, 30.0]))
+        ev = Event(t, rng.choice(ALL_KINDS), round_idx=0, sat=i)
+        q.push(ev)
+        pushed.append(ev)
+    popped = _drain_pop(q)
+    for t in (10.0, 20.0, 30.0):
+        assert [e for e in popped if e.time == t] == \
+            [e for e in pushed if e.time == t]
+
+
+def test_pop_batch_equals_sequential_pops():
+    """Draining via pop_batch yields the byte-identical event sequence
+    the one-at-a-time pop loop yields."""
+    rng = random.Random(3)
+    evs = [Event(float(rng.randrange(5)), rng.choice(ALL_KINDS),
+                 round_idx=rng.randrange(3), sat=i, row=i)
+           for i in range(500)]
+    qa, qb = EventQueue(), EventQueue()
+    for ev in evs:
+        qa.push(ev)
+        qb.push(ev)
+    assert _drain_pop(qa) == _drain_batch(qb)
+
+
+def test_pop_batch_boundaries():
+    """A batch stops at a kind change, a round change, or a time change —
+    and never crosses one even when later events would re-match."""
+    q = EventQueue()
+    seq = [Event(1.0, EventKind.MODEL_ARRIVAL, 0, sat=0),
+           Event(1.0, EventKind.MODEL_ARRIVAL, 0, sat=1),
+           Event(1.0, EventKind.TRAIN_DONE, 0, sat=2),       # kind change
+           Event(1.0, EventKind.MODEL_ARRIVAL, 1, sat=3),    # round change
+           Event(1.0, EventKind.MODEL_ARRIVAL, 0, sat=4),
+           Event(2.0, EventKind.MODEL_ARRIVAL, 0, sat=5)]    # time change
+    for ev in seq:
+        q.push(ev)
+    sizes = []
+    while q:
+        sizes.append([e.sat for e in q.pop_batch()])
+    assert sizes == [[0, 1], [2], [3], [4], [5]]
+
+
+def test_pop_batch_flood():
+    """The mega-constellation shape: one dt-slice flood of arrivals pops
+    as ONE batch in push order."""
+    q = EventQueue()
+    for i in range(10_000):
+        q.push(Event(60.0, EventKind.MODEL_ARRIVAL, 2, sat=i, row=i))
+    batch = q.pop_batch()
+    assert len(batch) == 10_000
+    assert [e.sat for e in batch] == list(range(10_000))
+    assert not q
+
+
+def test_push_many_preserves_sequence_order():
+    """push_many(evs) assigns the same sequence numbers as per-event
+    pushes: its events pop after earlier same-time pushes and in input
+    order among themselves."""
+    q = EventQueue()
+    first = Event(5.0, EventKind.TRIGGER_TIMEOUT, 0, sat=-1)
+    q.push(first)
+    bulk = [Event(5.0, EventKind.TRIGGER_TIMEOUT, 0, sat=i)
+            for i in range(20)]
+    q.push_many(bulk)
+    assert _drain_pop(q) == [first] + bulk
+
+
+def test_nan_time_rejected():
+    with pytest.raises(AssertionError):
+        Event(float("nan"), EventKind.TRAIN_DONE, 0)

@@ -272,6 +272,45 @@ def test_arrival_conservation_ledger(seed, loss, burst, outage, energy,
         s["arrivals_committed"] + dropped + leftover)
 
 
+# ---- sparse contact compilation parity (DESIGN.md §14) ---------------------
+
+@settings(max_examples=20, deadline=None)
+@given(o=st.integers(1, 4), n=st.integers(1, 8),
+       alt=st.floats(500e3, 2000e3),
+       inc=st.floats(40.0, 90.0),
+       scenario=st.sampled_from(["gs", "hap", "twohap", "hapring:4"]),
+       dt=st.sampled_from([30.0, 60.0]),
+       hours=st.integers(2, 5),
+       t_query=st.floats(0.0, 7200.0))
+def test_sparse_dense_contact_parity_property(o, n, alt, inc, scenario,
+                                              dt, hours, t_query):
+    """For ANY Walker geometry and PS scenario the sparse segment
+    compiler must reproduce the dense grid's contact plan exactly: the
+    identical window set (sats, nodes, bounds, delays) and identical
+    next-contact answers — the coarse-to-fine elevation bound may only
+    ever *defer* to dense evaluation, never disagree with it."""
+    from repro.core.constellation import make_ps_nodes
+    from repro.sched import ContactPlan
+
+    cst = WalkerDelta(o, n, float(alt), float(inc))
+    nodes = make_ps_nodes(scenario)
+    dur = hours * 3600.0
+    dense = ContactPlan.compile(cst, nodes, dur, dt)
+    sparse = ContactPlan.compile(cst, nodes, dur, dt, visibility="sparse")
+    wd, ws = dense.windows(), sparse.windows()
+    assert [(w.sat, w.node, w.t_start, w.t_end, w.delay_s) for w in wd] == \
+        [(w.sat, w.node, w.t_start, w.t_end, w.delay_s) for w in ws]
+    assert dense.summary() == sparse.summary()
+    sats = np.arange(cst.num_sats)
+    t = min(float(t_query), dur - dt)
+    td, pd = dense.next_contact(sats, t)
+    ts, ps = sparse.next_contact(sats, t)
+    np.testing.assert_array_equal(td, ts)
+    np.testing.assert_array_equal(pd, ps)
+    np.testing.assert_array_equal(dense.next_contact_by_node(t),
+                                  sparse.next_contact_by_node(t))
+
+
 # ---- batched scenario engine parity (DESIGN.md §13) ------------------------
 
 @settings(max_examples=5, deadline=None)

@@ -1,0 +1,113 @@
+"""Layer-4 scale proof: the (C, N) ModelBank provably shards (DESIGN.md §14).
+
+Everything before this test only *type-checked* bank sharding on the
+identity mesh (one device -> every NamedSharding is trivially satisfied).
+Here a subprocess forces an 8-device CPU backend so the S=10^4-class bank
+actually splits: each device must own C/8 participant rows, the sharded
+contraction must reduce over a genuinely distributed C axis, and the
+fused epoch program at C=16384 must (a) keep its bank on the documented
+``bank_sharding`` layout and (b) stay numerically identical to the
+single-logical-device run.
+
+Subprocess because jax locks the device count at first init — the same
+pattern as ``test_epoch_step.py``'s 4-device case, scaled up.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+SCALE_SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.epoch_step import (EpochStepProgram, bank_sharding,
+                                       sharded_contract)
+    from repro.core.modelbank import FlatSpec, flatten_tree
+    from repro.launch.mesh import make_data_mesh
+    from repro.launch.sharding import replicated
+
+    assert len(jax.devices()) == 8
+    mesh = make_data_mesh()
+    assert dict(zip(mesh.axis_names, mesh.devices.shape))["data"] == 8
+
+    # ---- the bank really splits: 16384 rows -> 2048 per device ----------
+    C, N = 16384, 32
+    rng = np.random.default_rng(0)
+    bank_host = rng.standard_normal((C, N)).astype(np.float32)
+    bank = jax.device_put(bank_host, bank_sharding(mesh))
+    shards = bank.addressable_shards
+    assert len(shards) == 8
+    assert {s.device for s in shards} == set(jax.devices())
+    for s in shards:
+        assert s.data.shape == (C // 8, N), s.data.shape
+    np.testing.assert_array_equal(np.asarray(bank), bank_host)
+
+    # ---- sharded contraction reduces over the distributed C axis --------
+    w = jax.device_put(rng.random(C).astype(np.float32),
+                       jax.sharding.NamedSharding(mesh, P("data")))
+    out = sharded_contract(w, bank, mesh)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(w) @ bank_host,
+                               atol=1e-3, rtol=1e-4)
+
+    # ---- fused epoch program at mega-constellation capacity -------------
+    w0 = {"w": np.arange(24, dtype=np.float32).reshape(4, 6),
+          "b": np.ones(8, np.float32)}
+    spec = FlatSpec.of(w0)
+
+    def train_fn(params, inputs, ids, seed):
+        flat = flatten_tree(params)
+        offs = ((ids * 37 + seed.astype(jnp.int32)) % 11
+                - 5).astype(jnp.float32) * 0.01
+        stack = flat[None, :] * 0.9 + offs[:, None] + inputs[:, None]
+        return stack, offs
+
+    cap, K = 8, 2
+    ids = np.arange(C, dtype=np.int32)
+    inputs = np.linspace(0.0, 1.0, C).astype(np.float32)
+    wv = (np.linspace(0.1, 0.2, C) / C).astype(np.float32)
+    wc = np.zeros(cap, np.float32)
+    dw_row = np.full(C, 1.0 / C, np.float32)
+    dw_seg = np.repeat(np.arange(K), C // K).astype(np.int32)
+    dwc = np.zeros((K, cap), np.float32)
+
+    outs = {}
+    for name, m in (("single", None), ("mesh", mesh)):
+        prog = EpochStepProgram(spec, train_fn, mesh=m)
+        w_flat = spec.flatten(w0)
+        carry = jnp.zeros((cap, spec.num_params), jnp.float32)
+        ref = jnp.zeros(spec.num_params)
+        new_w, stack, dists, losses = prog.step(
+            w_flat, carry, jnp.asarray(inputs), ids, 7, wv, wc, 0.5,
+            dw_row, dw_seg, K, 0, dwc, ref)
+        assert stack.shape == (C, spec.num_params)
+        outs[name] = (np.asarray(new_w), np.asarray(dists))
+        if name == "mesh":
+            assert stack.sharding.is_equivalent_to(bank_sharding(mesh),
+                                                   stack.ndim), stack.sharding
+            per_dev = {s.device: s.data.shape for s in
+                       stack.addressable_shards}
+            assert len(per_dev) == 8
+            assert all(sh == (C // 8, spec.num_params)
+                       for sh in per_dev.values()), per_dev
+    np.testing.assert_allclose(outs["single"][0], outs["mesh"][0], atol=1e-5)
+    np.testing.assert_allclose(outs["single"][1], outs["mesh"][1], atol=1e-5)
+    print("SCALE-SHARD-OK")
+""")
+
+
+def test_bank_shards_at_scale_on_8_devices():
+    here = os.path.dirname(__file__)
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(here, "..", "src"), here]))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", SCALE_SHARD_SCRIPT],
+                          env=env, capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "SCALE-SHARD-OK" in proc.stdout
